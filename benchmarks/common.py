@@ -1,0 +1,87 @@
+"""Shared setup for the paper-figure benchmarks.
+
+Scales are reduced (CPU container) but keep every structural element of the
+paper's experiments: the CW attack loss on a trained conv classifier over
+synthetic CIFAR-like images (Sec V-A), and softmax regression on a synthetic
+Fashion-MNIST-like non-iid split (Sec V-B).
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedZOConfig
+from repro.data.synthetic import (make_classification, noniid_shards,
+                                  random_partition)
+from repro.models import simple
+
+
+def timed(fn, *args, n=1):
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) / n * 1e6  # µs
+
+
+@functools.lru_cache(maxsize=1)
+def attack_setup(n_train=2000, n_attack=512, n_clients=10, seed=0):
+    """Train the black-box CNN on synthetic CIFAR-like data, then build the
+    federated attack problem over the correctly-classified images."""
+    x, y = make_classification(n_train + 512, 32 * 32 * 3, 10, seed=seed,
+                               scale=0.35, image_shape=(32, 32, 3))
+    xtr, ytr = jnp.asarray(x[:n_train]), jnp.asarray(y[:n_train])
+    params = simple.cnn_init(jax.random.key(seed))
+
+    @jax.jit
+    def sgd_step(p, xb, yb):
+        loss, g = jax.value_and_grad(simple.cnn_loss)(p, {"x": xb, "y": yb})
+        return jax.tree.map(lambda a, b: a - 0.05 * b, p, g), loss
+
+    rng = np.random.default_rng(seed)
+    for step in range(300):
+        idx = rng.integers(0, n_train, 64)
+        params, loss = sgd_step(params, xtr[idx], ytr[idx])
+
+    pred = jnp.argmax(simple.cnn_logits(params, jnp.asarray(x)), -1)
+    correct = np.asarray(pred == jnp.asarray(y))
+    acc = correct[:n_train].mean()
+    xi, yi = x[correct], y[correct]
+    xi, yi = xi[:n_attack], yi[:n_attack]
+    clients = random_partition(xi.reshape(len(yi), -1), yi, n_clients,
+                               seed=seed)
+    for c in clients:
+        c["x"] = c["x"].reshape(-1, 32, 32, 3)
+    return params, clients, float(acc), (jnp.asarray(xi), jnp.asarray(yi))
+
+
+def attack_loss_fn(classifier_params):
+    # c=0.3 keeps the paper's margin-vs-distortion trade-off but weights the
+    # attack term enough to make visible progress at reduced round counts.
+    def loss(pert_params, batch):
+        return simple.cw_attack_loss(pert_params["x"], batch,
+                                     classifier_params, c=0.3)
+    return loss
+
+
+@functools.lru_cache(maxsize=1)
+def softmax_setup(n=4000, n_clients=50, seed=0):
+    x, y = make_classification(n + 1000, 784, 10, seed=seed)
+    clients = noniid_shards(x[:n], y[:n], n_clients)
+    test = {"x": jnp.asarray(x[n:]), "y": jnp.asarray(y[n:])}
+    return clients, test
+
+
+def run_fedzo_rounds(loss_fn, params0, clients, cfg: FedZOConfig, rounds,
+                     eval_fn=None):
+    from repro.fed.server import FedServer
+    srv = FedServer(loss_fn, params0, clients, cfg, eval_fn=eval_fn)
+    t0 = time.perf_counter()
+    hist = srv.run(rounds)
+    us = (time.perf_counter() - t0) / rounds * 1e6
+    return srv.params, hist, us

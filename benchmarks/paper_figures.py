@@ -1,0 +1,200 @@
+"""One benchmark per paper table/figure (Sec. V), reduced scale.
+
+Each ``fig*`` function returns rows (name, us_per_round, derived_metric).
+The derived metric is the figure's y-axis quantity at the end of the run
+(attack loss / attack success rate / train loss / test accuracy), so the
+figure's ordering claims can be read directly off the CSV.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (attack_loss_fn, attack_setup,
+                               run_fedzo_rounds, softmax_setup)
+from repro.configs.base import FedZOConfig
+from repro.core import baselines, estimator
+from repro.data.synthetic import sample_local_batches
+from repro.fed.server import FedServer
+from repro.models import simple
+from repro.models.simple import (attack_success, softmax_accuracy,
+                                 softmax_init, softmax_loss)
+
+ROUNDS = 15
+
+
+def _pert0():
+    return {"x": jnp.zeros((32 * 32 * 3,), jnp.float32)}
+
+
+def fig1a_h_sweep():
+    """Fig 1a: attack loss vs rounds for H ∈ {1, 5, 10, 20}, N=M=10."""
+    cls_params, clients, cls_acc, _ = attack_setup()
+    loss = attack_loss_fn(cls_params)
+    rows = [("fig1a/classifier_acc", 0.0, cls_acc)]
+    for h in (1, 5, 10, 20):
+        cfg = FedZOConfig(n_devices=10, n_participating=10, local_iters=h,
+                          lr=2e-2, mu=1e-3, b1=25, b2=20, seed=h)
+        p, hist, us = run_fedzo_rounds(loss, _pert0(), clients, cfg, ROUNDS)
+        rows.append((f"fig1a/fedzo_H{h}_attack_loss", us,
+                     hist[-1]["mean_local_loss"]))
+    return rows
+
+
+def fig1a_baselines():
+    """Fig 1a overlay: DZOPA and ZONE-S under the same loss."""
+    cls_params, clients, _, _ = attack_setup()
+    loss = attack_loss_fn(cls_params)
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # DZOPA: one ZO update + consensus mixing per round, all agents
+    cfg = FedZOConfig(lr=5e-2, mu=1e-3, b2=20)
+    cp = jax.tree.map(lambda x: jnp.tile(x, (10, 1)), _pert0())
+    last = None
+    import time
+    t0 = time.perf_counter()
+    for t in range(ROUNDS):
+        batches = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[sample_local_batches(c, rng, 1, 25) for c in clients])
+        batches = jax.tree.map(lambda x: x[:, 0], batches)
+        rngs = jax.random.split(jax.random.key(t), 10)
+        cp, last = baselines.dzopa_round(loss, cp, batches, rngs, cfg)
+    us = (time.perf_counter() - t0) / ROUNDS * 1e6
+    rows.append(("fig1a/dzopa_attack_loss", us, float(last)))
+
+    # ZONE-S: one sampled agent per round, penalty rho=500
+    p = _pert0()
+    t0 = time.perf_counter()
+    for t in range(ROUNDS * 10):  # iteration count matched to FedZO queries
+        i = int(rng.integers(0, 10))
+        b = sample_local_batches(clients[i], rng, 1, 25)
+        b = jax.tree.map(lambda x: x[0], b)
+        p, l = baselines.zone_s_round(loss, p, b, jax.random.key(1000 + t),
+                                      rho=500.0, mu=1e-3, b2=20)
+    us = (time.perf_counter() - t0) / ROUNDS * 1e6
+    rows.append(("fig1a/zones_attack_loss", us, float(loss(p, {
+        "x": jnp.stack([c["x"] for c in clients[:1]][0][:25]),
+        "y": jnp.stack([c["y"] for c in clients[:1]][0][:25])}))))
+    return rows
+
+
+def fig1b_m_sweep():
+    """Fig 1b: effect of participating devices M ∈ {2, 5, 10}, N=10, H=10."""
+    cls_params, clients, _, _ = attack_setup()
+    loss = attack_loss_fn(cls_params)
+    rows = []
+    for m in (2, 5, 10):
+        cfg = FedZOConfig(n_devices=10, n_participating=m, local_iters=10,
+                          lr=2e-2, mu=1e-3, b1=25, b2=20, seed=m)
+        p, hist, us = run_fedzo_rounds(loss, _pert0(), clients, cfg, ROUNDS)
+        rows.append((f"fig1b/fedzo_M{m}_attack_loss", us,
+                     hist[-1]["mean_local_loss"]))
+    return rows
+
+
+def fig1c_snr_sweep():
+    """Fig 1c: AirComp-assisted FedZO at SNR ∈ {-10, -5, 0} dB vs noise-free."""
+    cls_params, clients, _, _ = attack_setup()
+    loss = attack_loss_fn(cls_params)
+    rows = []
+    for snr in (None, 0.0, -5.0, -10.0):
+        cfg = FedZOConfig(n_devices=10, n_participating=10, local_iters=10,
+                          lr=2e-2, mu=1e-3, b1=25, b2=20, seed=5,
+                          aircomp=snr is not None,
+                          snr_db=snr if snr is not None else 0.0, h_min=0.8)
+        p, hist, us = run_fedzo_rounds(loss, _pert0(), clients, cfg, ROUNDS)
+        tag = "noise_free" if snr is None else f"snr{int(snr)}dB"
+        rows.append((f"fig1c/fedzo_{tag}_attack_loss", us,
+                     hist[-1]["mean_local_loss"]))
+    return rows
+
+
+def fig2_attack_accuracy():
+    """Fig 2: attack success rate (fraction of flipped predictions)."""
+    cls_params, clients, _, (xi, yi) = attack_setup()
+    loss = attack_loss_fn(cls_params)
+    rows = []
+    for h in (5, 20):
+        cfg = FedZOConfig(n_devices=10, n_participating=10, local_iters=h,
+                          lr=2e-2, mu=1e-3, b1=25, b2=20, seed=h)
+        p, hist, us = run_fedzo_rounds(loss, _pert0(), clients, cfg, ROUNDS)
+        succ = float(attack_success(p["x"], {"x": xi, "y": yi}, cls_params))
+        rows.append((f"fig2/fedzo_H{h}_attack_success", us, succ))
+    return rows
+
+
+def fig3_softmax_h():
+    """Fig 3: softmax regression, FedZO H ∈ {5, 20} vs FedAvg H=5 (N=50, M=20)."""
+    clients, test = softmax_setup()
+    rows = []
+    ev = jax.jit(lambda p: softmax_accuracy(p, test))
+    for h in (5, 20):
+        cfg = FedZOConfig(n_devices=50, n_participating=20, local_iters=h,
+                          lr=1e-3, mu=1e-3, b1=25, b2=20, seed=h)
+        p, hist, us = run_fedzo_rounds(softmax_loss, softmax_init(None),
+                                       clients, cfg, ROUNDS)
+        rows.append((f"fig3/fedzo_H{h}_test_acc", us, float(ev(p))))
+    cfg = FedZOConfig(n_devices=50, n_participating=20, local_iters=5,
+                      lr=1e-3, seed=0)
+    srv = FedServer(softmax_loss, softmax_init(None), clients, cfg,
+                    algo="fedavg")
+    import time
+    t0 = time.perf_counter()
+    srv.run(ROUNDS)
+    us = (time.perf_counter() - t0) / ROUNDS * 1e6
+    rows.append(("fig3/fedavg_H5_test_acc", us, float(ev(srv.params))))
+    return rows
+
+
+def fig4_softmax_m():
+    """Fig 4: softmax regression M ∈ {10, 50}, H=5."""
+    clients, test = softmax_setup()
+    ev = jax.jit(lambda p: softmax_accuracy(p, test))
+    rows = []
+    for m in (10, 50):
+        cfg = FedZOConfig(n_devices=50, n_participating=m, local_iters=5,
+                          lr=1e-3, mu=1e-3, b1=25, b2=20, seed=m)
+        p, hist, us = run_fedzo_rounds(softmax_loss, softmax_init(None),
+                                       clients, cfg, ROUNDS)
+        rows.append((f"fig4/fedzo_M{m}_test_acc", us, float(ev(p))))
+    return rows
+
+
+def fig5_softmax_snr():
+    """Fig 5: AirComp softmax regression at SNR ∈ {-5, 0} dB vs noise-free."""
+    clients, test = softmax_setup()
+    ev = jax.jit(lambda p: softmax_accuracy(p, test))
+    rows = []
+    for snr in (None, 0.0, -5.0):
+        cfg = FedZOConfig(n_devices=50, n_participating=20, local_iters=5,
+                          lr=1e-3, mu=1e-3, b1=25, b2=20, seed=9,
+                          aircomp=snr is not None,
+                          snr_db=snr if snr is not None else 0.0, h_min=0.8)
+        p, hist, us = run_fedzo_rounds(softmax_loss, softmax_init(None),
+                                       clients, cfg, ROUNDS)
+        tag = "noise_free" if snr is None else f"snr{int(snr)}dB"
+        rows.append((f"fig5/fedzo_{tag}_test_acc", us, float(ev(p))))
+    return rows
+
+
+def table1_rate_scaling():
+    """Table I: convergence improves with the M·H·T product (linear-speedup
+    sanity: the loss after a fixed query budget decreases as M·H grows)."""
+    clients, test = softmax_setup()
+    rows = []
+    losses = {}
+    for (m, h) in ((5, 1), (10, 5), (20, 10)):
+        cfg = FedZOConfig(n_devices=50, n_participating=m, local_iters=h,
+                          lr=1e-3, mu=1e-3, b1=25, b2=10, seed=1)
+        p, hist, us = run_fedzo_rounds(softmax_loss, softmax_init(None),
+                                       clients, cfg, 10)
+        l = float(softmax_loss(p, test))
+        losses[(m, h)] = l
+        rows.append((f"table1/loss_M{m}_H{h}", us, l))
+    ordered = [losses[(5, 1)], losses[(10, 5)], losses[(20, 10)]]
+    rows.append(("table1/monotone_in_MH", 0.0,
+                 float(ordered[0] >= ordered[1] >= ordered[2])))
+    return rows

@@ -1,0 +1,38 @@
+"""Roofline summary rows derived from the dry-run artifacts (results/*.jsonl).
+
+derived = dominant-term seconds; us_per_call = compile seconds (per-combo
+compile cost of the production program)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS_GLOB = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "dryrun_*.jsonl")
+
+
+def load_records():
+    best = {}
+    for f in sorted(glob.glob(RESULTS_GLOB)):
+        for line in open(f):
+            r = json.loads(line)
+            k = (r["arch"], r["shape"], r["multi_pod"], r.get("algo", "fedzo"))
+            if "error" not in r or k not in best:
+                best[k] = r
+    return best
+
+
+def run():
+    rows = []
+    recs = load_records()
+    for (arch, shape, mp, algo), r in sorted(recs.items()):
+        if "error" in r or mp:
+            continue
+        roof = r["roofline_s"]
+        dom = r["dominant_term"]
+        rows.append((f"roofline/{arch}/{shape}/{dom}",
+                     r["compile_s"] * 1e6, roof[dom]))
+    if not rows:
+        rows.append(("roofline/no_dryrun_artifacts_found", 0.0, 0.0))
+    return rows

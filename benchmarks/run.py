@@ -1,0 +1,48 @@
+"""Benchmark harness: one entry per paper table/figure (DESIGN.md §6).
+
+Prints ``name,us_per_call,derived`` CSV. ``--quick`` runs only the kernel and
+roofline benches; default runs everything (≈10-20 min on CPU).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from benchmarks import kernels_bench, roofline_report
+    suites = [("kernels", kernels_bench.run),
+              ("roofline", roofline_report.run)]
+    if not args.quick:
+        from benchmarks import paper_figures as pf
+        suites = [
+            ("fig1a", pf.fig1a_h_sweep), ("fig1a_b", pf.fig1a_baselines),
+            ("fig1b", pf.fig1b_m_sweep), ("fig1c", pf.fig1c_snr_sweep),
+            ("fig2", pf.fig2_attack_accuracy), ("fig3", pf.fig3_softmax_h),
+            ("fig4", pf.fig4_softmax_m), ("fig5", pf.fig5_softmax_snr),
+            ("table1", pf.table1_rate_scaling),
+        ] + suites
+
+    print("name,us_per_call,derived")
+    failed = False
+    for tag, fn in suites:
+        if args.only and args.only != tag:
+            continue
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception:  # noqa: BLE001
+            failed = True
+            print(f"{tag}/ERROR,0,nan", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

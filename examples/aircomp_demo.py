@@ -1,0 +1,41 @@
+"""AirComp over-the-air aggregation demo (paper Sec IV): explicit complex
+channel simulation vs the Eq. 17 closed form, and FedZO training through the
+noisy channel at several SNRs.
+
+    PYTHONPATH=src python examples/aircomp_demo.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedZOConfig
+from repro.core.aircomp import aircomp_simulate_channel, schedule_by_channel
+from repro.data.synthetic import make_classification, noniid_shards
+from repro.fed.server import FedServer
+from repro.models.simple import softmax_accuracy, softmax_init, softmax_loss
+
+# 1. channel anatomy
+deltas = jnp.asarray(np.random.default_rng(0).normal(size=(8, 256)),
+                     dtype=jnp.float32)
+y, diag = aircomp_simulate_channel(deltas, jax.random.key(0), snr_db=0.0,
+                                   h_min=0.8)
+err = float(jnp.linalg.norm(y - deltas.mean(0)) / jnp.linalg.norm(deltas.mean(0)))
+print(f"recovered Δ̄ with relative error {err:.3f} at 0 dB SNR")
+h, mask = schedule_by_channel(jax.random.key(1), 1000, 0.8)
+print(f"channel-threshold scheduling keeps {float(mask.mean()):.2%} "
+      f"of devices (theory: {np.exp(-0.64):.2%})")
+
+# 2. end-to-end: FedZO through the noisy channel
+x, yl = make_classification(5000, 784, 10, seed=0)
+clients = noniid_shards(x[:4000], yl[:4000], 50)
+test = {"x": jnp.asarray(x[4000:]), "y": jnp.asarray(yl[4000:])}
+ev = jax.jit(lambda p: softmax_accuracy(p, test))
+for snr in (None, 0.0, -5.0):
+    cfg = FedZOConfig(n_devices=50, n_participating=20, local_iters=5,
+                      lr=1e-3, mu=1e-3, b1=25, b2=20,
+                      aircomp=snr is not None,
+                      snr_db=snr if snr is not None else 0.0, h_min=0.8)
+    srv = FedServer(softmax_loss, softmax_init(None), clients, cfg)
+    srv.run(15)
+    tag = "noise-free" if snr is None else f"{snr:+.0f} dB"
+    print(f"SNR {tag:>10}: test acc {float(ev(srv.params)):.3f}")

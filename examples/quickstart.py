@@ -1,0 +1,27 @@
+"""Quickstart: FedZO (paper Algorithm 1) on non-iid softmax regression.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+50 clients, 10 sampled per round, H=5 local zeroth-order steps — reaches
+~100% test accuracy on the synthetic separable problem in ~20 rounds without
+ever computing a gradient.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedZOConfig
+from repro.data.synthetic import make_classification, noniid_shards
+from repro.fed.server import FedServer
+from repro.models.simple import softmax_accuracy, softmax_init, softmax_loss
+
+x, y = make_classification(7000, 784, 10, seed=0)
+clients = noniid_shards(x[:6000], y[:6000], 50)
+test = {"x": jnp.asarray(x[6000:]), "y": jnp.asarray(y[6000:])}
+
+cfg = FedZOConfig(n_devices=50, n_participating=10, local_iters=5,
+                  lr=1e-3, mu=1e-3, b1=25, b2=20)
+ev = jax.jit(lambda p: softmax_accuracy(p, test))
+server = FedServer(softmax_loss, softmax_init(None), clients, cfg,
+                   eval_fn=lambda p: {"test_acc": float(ev(p))})
+server.run(20, log_every=5)
+print(f"final test accuracy: {server.history[-1]['test_acc']:.3f}")

@@ -1,0 +1,34 @@
+"""Beyond-paper: seed-compressed FedZO uplink (DESIGN.md §3.4).
+
+Each client uploads (PRNG key, H×b2 coefficients) instead of a dense model
+delta; the server replays the seeds. Bit-exact vs the dense round, with a
+~75× smaller uplink even for the tiny softmax model (×10^10 for 671B).
+
+    PYTHONPATH=src python examples/seed_compression.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedZOConfig
+from repro.data.synthetic import (make_classification, noniid_shards,
+                                  sample_local_batches)
+from repro.fed.server import run_seed_compressed_round
+from repro.models.simple import softmax_init, softmax_loss
+
+x, y = make_classification(4000, 784, 10, seed=0)
+clients = noniid_shards(x, y, 10)
+cfg = FedZOConfig(local_iters=5, lr=1e-3, mu=1e-3, b1=25, b2=20)
+params = softmax_init(None)
+rng = np.random.default_rng(0)
+key = jax.random.key(0)
+for t in range(5):
+    batches = [jax.tree.map(jnp.asarray,
+               sample_local_batches(clients[i], rng, cfg.local_iters, cfg.b1))
+               for i in range(4)]
+    key, *ks = jax.random.split(key, 5)
+    params, wire, dense = run_seed_compressed_round(
+        softmax_loss, params, batches, ks, cfg)
+    full = {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+    print(f"round {t}: loss {float(softmax_loss(params, full)):.4f} "
+          f"uplink {wire} B vs dense {dense} B ({dense/wire:.0f}x smaller)")

@@ -1,0 +1,12 @@
+"""Batched serving example (prefill + streaming decode with ring KV caches).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch hymba-1.5b-smoke]
+"""
+import subprocess
+import sys
+
+cmd = [sys.executable, "-m", "repro.launch.serve",
+       "--arch", "qwen2-0.5b-smoke", "--batch", "4",
+       "--prompt-len", "32", "--gen", "16"] + sys.argv[1:]
+print("running:", " ".join(cmd))
+sys.exit(subprocess.call(cmd))

@@ -1,0 +1,42 @@
+"""Round/step checkpointing: params as .npz (flattened pytree paths) + a JSON
+sidecar with step metadata and the FedZO config. Exact-restore is tested."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(kp): np.asarray(v) for kp, v in flat}, treedef
+
+
+def save(path, params, *, step=0, meta=None):
+    os.makedirs(path, exist_ok=True)
+    arrays, _ = _flatten(params)
+    np.savez(os.path.join(path, "params.npz"), **arrays)
+    md = {"step": int(step)}
+    if meta is not None:
+        if dataclasses.is_dataclass(meta):
+            meta = dataclasses.asdict(meta)
+        md["meta"] = meta
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(md, f, indent=1)
+
+
+def restore(path, params_like):
+    """Restore into the structure of ``params_like`` (shape/dtype preserved)."""
+    loaded = np.load(os.path.join(path, "params.npz"))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_like)
+    leaves = []
+    for kp, ref in flat:
+        arr = loaded[jax.tree_util.keystr(kp)]
+        assert arr.shape == ref.shape, (kp, arr.shape, ref.shape)
+        leaves.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+    with open(os.path.join(path, "meta.json")) as f:
+        md = json.load(f)
+    return jax.tree_util.tree_unflatten(treedef, leaves), md["step"]

@@ -1,0 +1,42 @@
+"""Architecture registry: ``get_config("<arch-id>")`` / ``--arch <id>``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (FedZOConfig, INPUT_SHAPES, MLAConfig,
+                                ModelConfig, ShapeConfig)
+
+_ARCH_MODULES = {
+    "rwkv6-7b": "rwkv6_7b",
+    "llama-3.2-vision-90b": "llama32_vision_90b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "hymba-1.5b": "hymba_1_5b",
+    "qwen3-4b": "qwen3_4b",
+    "qwen1.5-32b": "qwen15_32b",
+    "gemma-2b": "gemma_2b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "qwen2-0.5b": "qwen2_0_5b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+SHAPE_IDS = tuple(INPUT_SHAPES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch.endswith("-smoke"):
+        return get_config(arch[: -len("-smoke")]).reduced()
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; choose from {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def get_shape(shape: str) -> ShapeConfig:
+    if shape not in INPUT_SHAPES:
+        raise KeyError(f"unknown shape {shape!r}; choose from {SHAPE_IDS}")
+    return INPUT_SHAPES[shape]
+
+
+__all__ = ["ModelConfig", "MLAConfig", "ShapeConfig", "FedZOConfig",
+           "INPUT_SHAPES", "ARCH_IDS", "SHAPE_IDS", "get_config", "get_shape"]

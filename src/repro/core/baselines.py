@@ -1,0 +1,69 @@
+"""Distributed zeroth-order baselines the paper compares against (Fig. 1-2).
+
+- ZO-SGD  (Ghadimi & Lan 2013): centralized stochastic ZO — the speedup
+  reference point of Table I.
+- DZOPA   (Yi et al. 2021 [10]): peer-to-peer distributed ZO, one ZO update +
+  one consensus-mixing step per iteration. The paper evaluates it on a
+  fully-connected graph and upgrades its two-point estimator to the
+  mini-batch type of Eq. (2); we do the same (mixing over a fully-connected
+  graph = uniform averaging).
+- ZONE-S  (Hajinezhad et al. 2019 [28]): primal-dual, one sampled agent per
+  iteration with penalty ρ; per its update rule the primal step reduces to
+  x^{r+1} = x^r − (1/ρ)·e_{i_r}. We implement that practical form with the
+  paper's ρ = 500 default (noted simplification: the exact ZONE-S dual
+  recursion collapses to this under a fully-available primal oracle).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedZOConfig
+from repro.core import estimator
+from repro.utils.tree import tree_add, tree_axpy, tree_scale
+
+
+def zo_sgd_step(loss_fn, params, batch, rng, *, lr, mu, b2=1, kind="sphere"):
+    """Centralized ZO-SGD step."""
+    coeffs, base = estimator.coefficients(loss_fn, params, batch, rng,
+                                          mu=mu, b2=b2, kind=kind)
+    params = estimator.apply_coefficients(params, rng, coeffs, scale=-lr,
+                                          kind=kind)
+    return params, base
+
+
+def dzopa_round(loss_fn, client_params, client_batches, client_rngs,
+                cfg: FedZOConfig):
+    """One DZOPA iteration over all N agents (fully-connected mixing).
+
+    client_params: pytree with leading [N] axis (per-agent iterates).
+    Returns (new_client_params, mean_loss). One ZO update per agent per
+    round (H=1 by construction — DZOPA has no local-update loop).
+    """
+    def one(params, batch, rng):
+        coeffs, base = estimator.coefficients(
+            loss_fn, params, batch, rng, mu=cfg.mu, b2=cfg.b2,
+            kind=cfg.estimator)
+        upd = estimator.apply_coefficients(params, rng, coeffs, scale=-cfg.lr,
+                                           kind=cfg.estimator)
+        return upd, base
+
+    updated, losses = jax.vmap(one)(client_params, client_batches, client_rngs)
+    # W = (1/N) 11^T mixing: every agent moves to the average
+    mixed = jax.tree.map(
+        lambda x: jnp.broadcast_to(jnp.mean(x, 0, keepdims=True), x.shape),
+        updated)
+    return mixed, jnp.mean(losses)
+
+
+def zone_s_round(loss_fn, params, batch, rng, *, rho, mu, b2=1, kind="sphere"):
+    """One ZONE-S iteration: one sampled agent, penalty-ρ primal step.
+
+    The caller samples the agent (and its batch); the step is
+    x ← x − (1/ρ)·e_i with e_i the agent's mini-batch ZO estimator.
+    """
+    coeffs, base = estimator.coefficients(loss_fn, params, batch, rng,
+                                          mu=mu, b2=b2, kind=kind)
+    params = estimator.apply_coefficients(params, rng, coeffs,
+                                          scale=-1.0 / rho, kind=kind)
+    return params, base

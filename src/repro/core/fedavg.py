@@ -1,0 +1,51 @@
+"""FedAvg baseline (McMahan et al. 2017) — the paper's first-order comparison
+(Sec. V-B, Figs. 3-5). Same round structure as FedZO with the stochastic
+zeroth-order update replaced by an SGD step on jax.grad."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedZOConfig
+from repro.core.aircomp import aircomp_aggregate
+from repro.utils.tree import tree_add, tree_axpy, tree_scale, tree_sub
+
+
+def local_phase(loss_fn, params, batches, cfg: FedZOConfig):
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def body(p, batch):
+        loss, g = grad_fn(p, batch)
+        return tree_axpy(-cfg.lr, g, p), loss
+
+    p_fin, losses = jax.lax.scan(body, params, batches)
+    return p_fin, losses
+
+
+def round_simulated(loss_fn, server_params, client_batches, cfg: FedZOConfig,
+                    *, channel_rng=None):
+    """One FedAvg round over M clients (batches leading axes [M, H, ...])."""
+    def one_client(batches):
+        p_fin, losses = local_phase(loss_fn, server_params, batches, cfg)
+        return tree_sub(p_fin, server_params), losses
+
+    deltas, losses = jax.vmap(one_client)(client_batches)
+    if cfg.aircomp and channel_rng is not None:
+        agg, _ = aircomp_aggregate(deltas, channel_rng, snr_db=cfg.snr_db,
+                                   h_min=cfg.h_min)
+    else:
+        agg = tree_scale(1.0 / losses.shape[0],
+                         jax.tree.map(lambda x: jnp.sum(x, 0), deltas))
+    return tree_add(server_params, agg), {"mean_local_loss": jnp.mean(losses)}
+
+
+def make_train_step(loss_fn, cfg: FedZOConfig):
+    """Cross-silo first-order step (dry-run/roofline comparison baseline)."""
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def step(params, batch, rng):
+        del rng
+        loss, g = grad_fn(params, batch)
+        return tree_axpy(-cfg.lr, g, params), {"loss": loss}
+
+    return step

@@ -1,0 +1,197 @@
+"""FedZO (paper Algorithm 1) — derivative-free federated optimization.
+
+Two deployment modes share this module:
+
+1. **Simulation mode** (paper scale, Sec. V): N clients held in memory,
+   ``round_simulated`` vmaps the H-step local phase over the M sampled
+   clients and aggregates deltas (exact Algorithm 1, with optional AirComp
+   channel distortion from ``core.aircomp``).
+
+2. **Cross-silo mode** (framework scale): each TPU pod is one client.
+   ``local_iterate`` is the jitted unit the dry-run lowers; the launcher
+   loops H of them per round and aggregates across the ``pod`` mesh axis
+   (dense psum, AirComp-noisy psum, or seed-compressed — core/seedcomm.py).
+
+The local phase never materializes a gradient pytree: per direction it pays
+one loss forward + one axpy, and the update is replayed from seeds
+(DESIGN.md §3). ``jax.grad`` is never called.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedZOConfig
+from repro.core import estimator
+from repro.core.aircomp import aircomp_aggregate
+from repro.utils.tree import tree_add, tree_scale, tree_sub
+
+
+class LocalResult(NamedTuple):
+    params: object        # x_i^{(t,H)}
+    coeffs: jnp.ndarray   # [H, b2] estimator coefficients (seed-replayable)
+    losses: jnp.ndarray   # [H] base losses along the trajectory
+
+
+def local_iterate(loss_fn, params, batch, rng, cfg: FedZOConfig):
+    """One stochastic zeroth-order update (Eq. 5-6): x ← x − η ∇̃F(x).
+
+    Returns (new_params, coeffs [b2], base_loss). This is the unit the
+    multi-pod dry-run lowers as ``train_step``.
+    """
+    import jax.numpy as _jnp
+    ddt = _jnp.dtype(cfg.direction_dtype)
+    coeffs, base = estimator.coefficients(
+        loss_fn, params, batch, rng, mu=cfg.mu, b2=cfg.b2, kind=cfg.estimator,
+        direction_dtype=ddt, central=cfg.central)
+    new_params = estimator.apply_coefficients(
+        params, rng, coeffs, scale=-cfg.lr, kind=cfg.estimator,
+        direction_dtype=ddt)
+    return new_params, coeffs, base
+
+
+def local_phase(loss_fn, params, batches, rng, cfg: FedZOConfig) -> LocalResult:
+    """H local iterates (Algorithm 1 inner loop).
+
+    ``batches`` is a pytree whose leaves have a leading [H] axis (the client
+    pre-samples H minibatches of size b1).
+    """
+    def body(carry, inp):
+        p = carry
+        k, batch = inp
+        p, coeffs, base = local_iterate(loss_fn, p, batch, k, cfg)
+        return p, (coeffs, base)
+
+    keys = jax.random.split(rng, cfg.local_iters)
+    p_fin, (coeffs, losses) = jax.lax.scan(body, params, (keys, batches))
+    return LocalResult(p_fin, coeffs, losses)
+
+
+def client_delta(loss_fn, params, batches, rng, cfg) -> tuple:
+    """Δ_i = x_i^{(t,H)} − x^t plus the seed-replayable summary."""
+    res = local_phase(loss_fn, params, batches, rng, cfg)
+    return tree_sub(res.params, params), res
+
+
+def round_simulated(loss_fn, server_params, client_batches, client_rngs,
+                    cfg: FedZOConfig, *, channel_rng=None, momentum=None):
+    """One full communication round over the M sampled clients (vmapped).
+
+    client_batches: pytree with leading [M, H, ...] axes.
+    client_rngs:    [M] PRNG keys.
+    ``momentum``: optional server-momentum state (FedOpt-style — beyond
+    paper); pass a zeros-like tree and cfg.server_momentum > 0 to enable.
+    Returns (new_server_params, metrics dict[, new_momentum]).
+    """
+    def one_client(batches, rng):
+        delta, res = client_delta(loss_fn, server_params, batches, rng, cfg)
+        return delta, res.losses
+
+    deltas, losses = jax.vmap(one_client)(client_batches, client_rngs)
+
+    if cfg.aircomp and channel_rng is not None:
+        agg, air_stats = aircomp_aggregate(
+            deltas, channel_rng, snr_db=cfg.snr_db, h_min=cfg.h_min)
+    else:
+        agg = tree_scale(1.0 / losses.shape[0],
+                         jax.tree.map(lambda x: jnp.sum(x, 0), deltas))
+        air_stats = {}
+
+    if momentum is not None and cfg.server_momentum > 0:
+        momentum = jax.tree.map(
+            lambda m, g: (cfg.server_momentum * m + g).astype(m.dtype),
+            momentum, agg)
+        agg = momentum
+    new_params = tree_add(server_params, agg)
+    metrics = {"mean_local_loss": jnp.mean(losses),
+               "first_loss": jnp.mean(losses[:, 0]), **air_stats}
+    if momentum is not None:
+        return new_params, metrics, momentum
+    return new_params, metrics
+
+
+def make_pod_round_step(loss_fn_grouped, cfg: FedZOConfig, mesh) -> Callable:
+    """Cross-silo FedZO round for the multi-pod mesh: each pod is one client.
+
+    Pure-GSPMD formulation (the nested manual-axis formulation with
+    independent per-pod directions crashes XLA's SPMD partitioner — see
+    DESIGN.md §5): all pods share the round's perturbation directions
+    (common random seeds — exactly the wire format of core/seedcomm.py), the
+    batch is sharded over ('pod','data') so each pod's loss group is
+    computed from its own silo data, and the only cross-pod exchange is the
+    per-pod coefficient vector [n_pod, b2] (scalar psums). The dense-delta /
+    AirComp uplink variant is costed separately by ``make_delta_agg_step``.
+
+    With shared directions, per-pod local trajectories cannot diverge inside
+    one jit program, so this round runs H=1 (FedSGD-ZO). The paper-faithful
+    independent-direction, H>1 algorithm is exercised by the simulation mode
+    (``round_simulated``) and by the per-pod single-silo ``make_train_step``
+    programs that a real deployment would run on each pod slice.
+
+    ``loss_fn_grouped(params, batch) -> [n_pod] per-pod losses``.
+    signature: (params, batch, rng) -> (params, metrics)
+    """
+    from repro.core.estimator import (_scale_factor, sample_direction,
+                                      stream_perturb)
+    from repro.utils.tree import tree_axpy, tree_size
+
+    n_pod = mesh.shape["pod"]
+
+    def step(params, batch, rng):
+        d = tree_size(params)
+        scale = _scale_factor(d, cfg.estimator)
+        base = loss_fn_grouped(params, batch)              # [n_pod]
+
+        def body(n, acc):
+            v = sample_direction(jax.random.fold_in(rng, n), params,
+                                 cfg.estimator, jnp.dtype(cfg.direction_dtype))
+            lp = loss_fn_grouped(tree_axpy(cfg.mu, v, params), batch)
+            c = scale * (lp - base).astype(jnp.float32) / cfg.mu  # [n_pod]
+            return acc.at[n].set(c)
+
+        coeffs = jax.lax.fori_loop(
+            0, cfg.b2, body, jnp.zeros((cfg.b2, n_pod), jnp.float32))
+        # federated aggregation: mean of per-pod coefficients (the entire
+        # cross-pod uplink in seed-compression mode)
+        c_mean = jnp.mean(coeffs, axis=1)                  # [b2]
+        new_params = estimator.apply_coefficients(
+            params, rng, c_mean, scale=-cfg.lr, kind=cfg.estimator,
+            direction_dtype=jnp.dtype(cfg.direction_dtype))
+        return new_params, {"loss": jnp.mean(base),
+                            "per_pod_loss": base,
+                            "coeff_pod_spread": jnp.std(coeffs, axis=1).mean()}
+
+    return step
+
+
+def make_delta_agg_step(cfg: FedZOConfig, n_pod: int) -> Callable:
+    """The dense-uplink aggregation program: per-pod model deltas (leading
+    [n_pod] axis, sharded over ``pod``) -> mean delta (+ optional AirComp
+    noise, Sec. IV). Lowered separately on the multi-pod mesh so the dry-run
+    prices the full-d cross-pod all-reduce that AirComp / seed-compression
+    eliminate. signature: (deltas, rng) -> tree
+    """
+    from repro.core.aircomp import aircomp_aggregate
+
+    def step(deltas, rng):
+        if cfg.aircomp:
+            agg, _ = aircomp_aggregate(deltas, rng, snr_db=cfg.snr_db,
+                                       h_min=cfg.h_min)
+            return agg
+        return jax.tree.map(lambda x: jnp.mean(x, axis=0), deltas)
+
+    return step
+
+
+def make_train_step(loss_fn, cfg: FedZOConfig) -> Callable:
+    """jit-ready cross-silo train step: one local ZO iterate.
+
+    signature: (params, batch, rng) -> (params, metrics)
+    """
+    def step(params, batch, rng):
+        new_params, coeffs, base = local_iterate(loss_fn, params, batch, rng, cfg)
+        return new_params, {"loss": base, "coeff_norm": jnp.linalg.norm(coeffs)}
+
+    return step

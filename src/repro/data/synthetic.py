@@ -1,0 +1,98 @@
+"""Synthetic federated datasets with the paper's non-iid protocols.
+
+The container is offline, so Fashion-MNIST / CIFAR-10 are replaced by
+deterministic synthetic generators that preserve the *shape of the problem*:
+class-conditional Gaussian images (classes are linearly separable enough for
+softmax regression to train, like F-MNIST) and 32×32×3 "CIFAR-like" images
+for the attack task.
+
+Non-iid split (Sec. V-B, following McMahan et al.): sort by label, cut into
+2·N shards, deal 2 shards per client → each client sees ≤ 4 distinct labels
+(2 per shard boundary effects aside).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_classification(n, n_features=784, n_classes=10, seed=0, scale=1.0,
+                        image_shape=None):
+    """Class-conditional Gaussians: x = mu_y + noise, labels balanced."""
+    rng = np.random.default_rng(seed)
+    mus = rng.normal(0, 1, (n_classes, n_features)).astype(np.float32)
+    y = np.arange(n) % n_classes
+    rng.shuffle(y)
+    x = mus[y] * scale + rng.normal(0, 1, (n, n_features)).astype(np.float32)
+    if image_shape is not None:
+        # squash to [0,1] pixel range for image-space tasks
+        x = 1.0 / (1.0 + np.exp(-x))
+        x = x.reshape((n,) + tuple(image_shape))
+    return x.astype(np.float32), y.astype(np.int32)
+
+
+def noniid_shards(x, y, n_clients, shards_per_client=2, seed=0):
+    """Label-sorted shard split (the paper's Fashion-MNIST protocol)."""
+    rng = np.random.default_rng(seed)
+    order = np.argsort(y, kind="stable")
+    x, y = x[order], y[order]
+    n_shards = n_clients * shards_per_client
+    shard_size = len(y) // n_shards
+    shard_ids = rng.permutation(n_shards)
+    clients = []
+    for c in range(n_clients):
+        take = shard_ids[c * shards_per_client:(c + 1) * shards_per_client]
+        idx = np.concatenate([np.arange(s * shard_size, (s + 1) * shard_size)
+                              for s in take])
+        clients.append({"x": x[idx], "y": y[idx]})
+    return clients
+
+
+def random_partition(x, y, n_clients, seed=0, uneven=True):
+    """IID partition; ``uneven`` draws random (Dirichlet) client sizes like
+    the attack experiment ('each device is assigned a random number of
+    samples')."""
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(len(y))
+    if uneven:
+        w = rng.dirichlet(np.full(n_clients, 5.0))
+        counts = np.maximum((w * len(y)).astype(int), 1)
+        counts[-1] = len(y) - counts[:-1].sum()
+    else:
+        counts = np.full(n_clients, len(y) // n_clients)
+    out, off = [], 0
+    for c in counts:
+        take = idx[off:off + c]
+        out.append({"x": x[take], "y": y[take]})
+        off += c
+    return out
+
+
+def sample_local_batches(client, rng: np.random.Generator, h, b1):
+    """Pre-sample H minibatches of size b1 for one client round -> stacked."""
+    n = len(client["y"])
+    idx = rng.integers(0, n, size=(h, b1))
+    return {"x": client["x"][idx], "y": client["y"][idx]}
+
+
+def lm_token_stream(n_tokens, vocab, seed=0, order=3):
+    """Deterministic synthetic LM corpus: a random Markov chain over the
+    vocabulary (gives a learnable non-uniform next-token distribution)."""
+    rng = np.random.default_rng(seed)
+    state = rng.integers(0, vocab)
+    # sparse transition structure: each token has `order` likely successors
+    succ = rng.integers(0, vocab, size=(vocab, order))
+    toks = np.empty(n_tokens, np.int32)
+    jumps = rng.random(n_tokens)
+    choices = rng.integers(0, order, n_tokens)
+    for i in range(n_tokens):
+        state = succ[state, choices[i]] if jumps[i] < 0.9 \
+            else rng.integers(0, vocab)
+        toks[i] = state
+    return toks
+
+
+def lm_batches(tokens, batch, seq, rng: np.random.Generator):
+    starts = rng.integers(0, len(tokens) - seq - 1, size=batch)
+    x = np.stack([tokens[s:s + seq] for s in starts])
+    y = np.stack([tokens[s + 1:s + seq + 1] for s in starts])
+    return {"tokens": x, "labels": y}

@@ -1,0 +1,1 @@
+from repro.fed.server import FedServer, run_seed_compressed_round  # noqa: F401

@@ -1,0 +1,92 @@
+"""jit'd public wrappers around the Pallas kernels: shape normalization,
+padding to block multiples, pytree-level ZO helpers.
+
+``interpret=None`` auto-selects: compiled on TPU, interpreter elsewhere (this
+container is CPU-only, so tests/benches run the interpreter; the compiled
+path is the production target).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import zo_axpy as _za
+
+
+def _auto_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, m):
+    n = x.shape[0]
+    pad = (-n) % m
+    if pad:
+        x = jnp.pad(x, ((0, pad),))
+    return x, n
+
+
+def axpy2(x, u, v, a, b, *, interpret=None, block=None):
+    """x + a·u + b·v for flat arrays of any length."""
+    block = block or _za.BLOCK
+    xp, n = _pad_to(x, block)
+    up, _ = _pad_to(u, block)
+    vp, _ = _pad_to(v, block)
+    ab = jnp.asarray([a, b], jnp.float32).reshape(2)
+    out = _za.zo_axpy2(xp, up, vp, ab, interpret=_auto_interpret(interpret),
+                       block=block)
+    return out[:n]
+
+
+def tree_axpy2(x_tree, u_tree, v_tree, a, b, *, interpret=None):
+    """Leafwise fused x + a·u + b·v (the MeZO unperturb-and-reperturb pass)."""
+    def one(x, u, v):
+        out = axpy2(x.reshape(-1), u.reshape(-1), v.reshape(-1), a, b,
+                    interpret=interpret)
+        return out.reshape(x.shape)
+    return jax.tree.map(one, x_tree, u_tree, v_tree)
+
+
+def attention(q, k, v, *, causal=True, window=0, scale=None,
+              block_q=128, block_k=128, interpret=None):
+    """Flash attention on [B, S, H, D] layout (matches models/layers.py).
+
+    Pads Sq/Sk up to block multiples; padded kv positions are masked out by
+    the causal/positional mask (padded q rows are discarded on return).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, Dv = v.shape
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    pq = (-Sq) % block_q
+    pk = (-Sk) % block_k
+    if pq:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    if not causal and pk:
+        # non-causal: mask padded kv by position via a window over Sk
+        raise NotImplementedError("pad non-causal kv not supported; "
+                                  "choose block_k dividing Sk")
+    out = _fa.flash_attention(qt, kt, vt, causal=causal, window=window,
+                              scale=scale, block_q=block_q, block_k=block_k,
+                              interpret=_auto_interpret(interpret))
+    return out[:, :, :Sq].transpose(0, 2, 1, 3)
+
+
+def rmsnorm(x, scale, *, eps=1e-6, interpret=None, block_rows=128):
+    """RMSNorm over the last dim of x [..., D]."""
+    shp = x.shape
+    x2 = x.reshape(-1, shp[-1])
+    R = x2.shape[0]
+    pad = (-R) % block_rows
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = _rn.rmsnorm(x2, scale, eps=eps, block_rows=block_rows,
+                      interpret=_auto_interpret(interpret))
+    return out[:R].reshape(shp)

@@ -1,0 +1,81 @@
+"""Fused ZO parameter-streaming kernel (Pallas, TPU target).
+
+FedZO's hot loop streams the whole parameter vector through the VPU several
+times per estimator sample:
+
+  perturb        x ← x + μ·v                 (before the perturbed forward)
+  unperturb +    x ← x + a·v_n + b·v_{n+1}   (MeZO-style fused transition to
+   next perturb                               the next direction: ONE pass
+                                              over HBM instead of two)
+  update         x ← x − η·Σ_n c_n v_n       (replayed from seeds)
+
+These are pure HBM-bandwidth ops; the kernel's job is fusion (XLA will not
+fuse across the loss-forward boundary) and explicit VMEM tiling. Block size
+is 8·128·64 = 64Ki elements → 256 KiB fp32 per stream, 3 streams ≈ 768 KiB of
+the ~16 MiB VMEM budget, leaving room for double buffering.
+
+Inputs are the flattened 1-D parameter leaf (padded to a block multiple by
+ops.py). ``zo_axpy2(x, u, v, a, b) = x + a·u + b·v`` is the general form;
+``a`` and ``b`` are scalars prefetched to SMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 8 * 128 * 64  # 64Ki elements per grid step
+
+
+def _axpy2_kernel(ab_ref, x_ref, u_ref, v_ref, o_ref):
+    a = ab_ref[0]
+    b = ab_ref[1]
+    x = x_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    o_ref[...] = (x + a * u + b * v).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def zo_axpy2(x, u, v, ab, *, interpret=False, block=BLOCK):
+    """x + ab[0]·u + ab[1]·v on flat arrays (len divisible by ``block``).
+
+    x: [N] any float dtype; u, v: [N] same-or-f32; ab: [2] f32 scalars.
+    """
+    (n,) = x.shape
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _axpy2_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((2,), lambda i: (0,)), spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=interpret,
+    )(ab, x, u, v)
+
+
+def _axpy_kernel(a_ref, x_ref, u_ref, o_ref):
+    a = a_ref[0]
+    o_ref[...] = (x_ref[...].astype(jnp.float32)
+                  + a * u_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def zo_axpy(x, u, a, *, interpret=False, block=BLOCK):
+    """x + a[0]·u on flat arrays."""
+    (n,) = x.shape
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _axpy_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1,), lambda i: (0,)), spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=interpret,
+    )(a, x, u)

@@ -1,0 +1,32 @@
+"""Production meshes (TPU v5e).
+
+Single pod: 256 chips as (16, 16) = (data, model).
+Multi-pod: 2 pods × 256 chips as (2, 16, 16) = (pod, data, model);
+the ``pod`` axis is the *federated* axis — one FedZO client per pod
+(DESIGN.md §3.3).
+
+Defined as functions so importing this module never touches jax device
+state; the dry-run sets XLA_FLAGS before calling.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU smoke)."""
+    n = len(jax.devices())
+    assert n % model_axis == 0
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def data_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

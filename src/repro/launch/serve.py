@@ -1,0 +1,80 @@
+"""Serving driver: batched prefill + decode loop on any registered arch.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b-smoke \
+        --batch 4 --prompt-len 32 --gen 16
+
+Demonstrates the production decode path (ring KV caches / SSM states,
+one-token steps) that the decode_32k / long_500k dry-run shapes lower.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.models.api import build, make_batch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b-smoke")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--width", type=int, default=0, help="cache width")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    model = build(cfg)
+    params = model.init(jax.random.key(args.seed))
+    width = args.width or (args.prompt_len + args.gen)
+
+    shape = ShapeConfig("serve", args.prompt_len, args.batch, "prefill")
+    batch = make_batch(model, shape, jax.random.key(args.seed + 1))
+
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, width))
+    decode = jax.jit(lambda p, b, c, pos: model.decode(p, b, c, pos))
+
+    t0 = time.time()
+    logits, cache = prefill(params, batch)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+    print(f"prefill: batch={args.batch} len={args.prompt_len} "
+          f"{t_prefill:.2f}s ({args.batch*args.prompt_len/t_prefill:.0f} tok/s)")
+
+    key = jax.random.key(args.seed + 2)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out_tokens = [tok]
+    t0 = time.time()
+    for i in range(args.gen):
+        db = dict(batch)
+        db["tokens"] = tok
+        pos = jnp.asarray(args.prompt_len + i, jnp.int32)
+        logits, cache = decode(params, db, cache, pos)
+        if args.temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits / args.temperature)[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    seqs = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
+    print(f"decode: {args.gen} steps in {dt:.2f}s "
+          f"({args.batch*args.gen/dt:.1f} tok/s)")
+    for b in range(min(args.batch, 2)):
+        print(f"  request {b}: {seqs[b].tolist()}")
+    assert np.isfinite(np.asarray(logits)).all()
+    print("serve OK")
+
+
+if __name__ == "__main__":
+    main()

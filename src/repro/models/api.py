@@ -1,0 +1,125 @@
+"""Unified model API over all families.
+
+``build(cfg)`` returns a ``Model`` bundle of pure functions:
+  init(rng) -> params                       param_specs() -> ShapeDtypeStructs
+  loss(params, batch, mesh) -> scalar       (what FedZO queries)
+  prefill(params, batch, width, mesh) -> (logits, cache)
+  decode(params, batch, cache, pos, mesh, window) -> (logits, cache)
+  init_cache(batch_size, width) -> zeroed cache
+  batch_shapes(shape_cfg) -> {name: (shape, dtype)} for input_specs/dry-run
+
+Batches are dicts; LM batches have "tokens"/"labels", VLM adds
+"vision_embeds", enc-dec adds "src_embeds" (the stubbed modality frontends).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, transformer, vlm
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    param_specs: Callable
+    loss: Callable
+    prefill: Callable
+    decode: Callable
+    init_cache: Callable
+    batch_shapes: Callable
+
+
+def _lm_batch_shapes(cfg, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"tokens": ((B, S), jnp.int32), "labels": ((B, S), jnp.int32)}
+    if shape.kind == "prefill":
+        return {"tokens": ((B, S), jnp.int32)}
+    return {"tokens": ((B, 1), jnp.int32)}  # decode
+
+
+def build(cfg: ModelConfig) -> Model:
+    dtype = jnp.dtype(cfg.dtype)
+
+    if cfg.family == "vlm":
+        def batch_shapes(shape):
+            d = _lm_batch_shapes(cfg, shape)
+            d["vision_embeds"] = ((shape.global_batch, cfg.n_frontend_tokens,
+                                   cfg.d_model), dtype)
+            return d
+
+        return Model(
+            cfg=cfg,
+            init=lambda rng: vlm.init_params(rng, cfg),
+            param_specs=lambda: vlm.param_specs(cfg),
+            loss=lambda p, b, mesh=None, n_groups=1: vlm.loss_fn(p, b, cfg, mesh, n_groups),
+            prefill=lambda p, b, width, mesh=None: vlm.prefill(
+                p, b["tokens"], b["vision_embeds"], cfg, width, mesh),
+            decode=lambda p, b, cache, pos, mesh=None, window=0: vlm.decode_step(
+                p, b["tokens"], cache, pos, cfg, mesh, window),
+            init_cache=lambda batch, width: vlm.init_cache(cfg, batch, width),
+            batch_shapes=batch_shapes,
+        )
+
+    if cfg.family == "encdec":
+        def batch_shapes(shape):
+            d = _lm_batch_shapes(cfg, shape)
+            # source frames scale with the target length for train/prefill
+            n_src = cfg.n_frontend_tokens
+            d["src_embeds"] = ((shape.global_batch, n_src, cfg.d_model), dtype)
+            if shape.kind == "decode":
+                del d["src_embeds"]  # decode runs off the cached cross-KV
+            return d
+
+        return Model(
+            cfg=cfg,
+            init=lambda rng: encdec.init_params(rng, cfg),
+            param_specs=lambda: encdec.param_specs(cfg),
+            loss=lambda p, b, mesh=None, n_groups=1: encdec.loss_fn(p, b, cfg, mesh, n_groups),
+            prefill=lambda p, b, width, mesh=None: encdec.prefill(
+                p, b["tokens"], b["src_embeds"], cfg, width, mesh),
+            decode=lambda p, b, cache, pos, mesh=None, window=0: encdec.decode_step(
+                p, b["tokens"], cache, pos, cfg, mesh, window),
+            init_cache=lambda batch, width: encdec.init_cache(cfg, batch, width),
+            batch_shapes=batch_shapes,
+        )
+
+    # dense / moe / hybrid / ssm share the decoder-only assembly
+    return Model(
+        cfg=cfg,
+        init=lambda rng: transformer.init_params(rng, cfg),
+        param_specs=lambda: transformer.param_specs(cfg),
+        loss=lambda p, b, mesh=None, n_groups=1: transformer.loss_fn(p, b, cfg, mesh, n_groups),
+        prefill=lambda p, b, width, mesh=None: transformer.prefill(
+            p, b["tokens"], cfg, width, mesh),
+        decode=lambda p, b, cache, pos, mesh=None, window=0: transformer.decode_step(
+            p, b["tokens"], cache, pos, cfg, mesh, window),
+        init_cache=lambda batch, width: transformer.init_cache(cfg, batch, width),
+        batch_shapes=lambda shape: _lm_batch_shapes(cfg, shape),
+    )
+
+
+def make_batch(model: Model, shape: ShapeConfig, rng):
+    """Concrete random batch matching batch_shapes (smoke tests / examples)."""
+    out = {}
+    for i, (name, (shp, dt)) in enumerate(sorted(model.batch_shapes(shape).items())):
+        k = jax.random.fold_in(rng, i)
+        if jnp.issubdtype(dt, jnp.integer):
+            out[name] = jax.random.randint(k, shp, 0, model.cfg.vocab, dt)
+        else:
+            out[name] = jax.random.normal(k, shp, dt)
+    return out
+
+
+def decode_width(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """KV-cache width used for a decode shape: full for 32k, sliding window
+    for long_500k on attention archs (DESIGN.md long-context policy)."""
+    if shape.seq_len > 65_536:
+        return min(cfg.long_context_window, shape.seq_len)
+    return shape.seq_len

@@ -1,0 +1,269 @@
+"""Attention variants: GQA/MQA self-attention, DeepSeek MLA, cross-attention.
+
+Cache conventions
+-----------------
+Self-attention KV caches are ring buffers of width ``W``:
+  {"k": [B, W, Hkv, D], "v": [B, W, Hkv, D]}
+``W == seq_len`` gives the ordinary full cache (decode_32k); ``W == window``
+gives the sliding-window cache used for ``long_500k`` on attention archs.
+``pos`` is the absolute position of the token being decoded; the slot written
+is ``pos % W`` and the validity mask is derived from ``pos`` alone, so decode
+steps are pure functions of (cache, pos).
+
+MLA caches the *compressed* latent (c_kv ++ k_rope) — [B, W, kv_lora + rope] —
+and uses the absorbed-matmul decode form, which is what makes the
+DeepSeek-V3 @ 32k/500k decode shapes fit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import (apply_rope, chunked_attention,
+                                 decode_attention, dense_init, init_norm,
+                                 norm_fwd, rope_angles)
+
+# ---------------------------------------------------------------------------
+# GQA self-attention
+
+
+def init_attention(rng, cfg, dtype):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(rng, 4)
+    p = {"wq": dense_init(ks[0], d, hq * hd, dtype),
+         "wk": dense_init(ks[1], d, hkv * hd, dtype),
+         "wv": dense_init(ks[2], d, hkv * hd, dtype),
+         "wo": dense_init(ks[3], hq * hd, d, dtype)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = init_norm(hd, "rmsnorm", dtype)
+        p["k_norm"] = init_norm(hd, "rmsnorm", dtype)
+    return p
+
+
+def _qkv(p, cfg, x):
+    B, S, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, hq, hd)
+    k = k.reshape(B, S, hkv, hd)
+    v = v.reshape(B, S, hkv, hd)
+    if cfg.qk_norm:
+        q = norm_fwd(p["q_norm"], q)
+        k = norm_fwd(p["k_norm"], k)
+    return q, k, v
+
+
+def attention_fwd(p, cfg, x, *, positions=None, window=None, causal=True):
+    """Full-sequence attention (train / prefill / encoder). x [B, S, d]."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _qkv(p, cfg, x)
+    cos, sin = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    w = cfg.sliding_window if window is None else window
+    out = chunked_attention(q, k, v, causal=causal, window=w if causal else 0)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def init_kv_cache(cfg, batch, width, dtype):
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((batch, width, hkv, hd), dtype),
+            "v": jnp.zeros((batch, width, hkv, hd), dtype)}
+
+
+def attention_prefill(p, cfg, x, width):
+    """Prefill: full attention + return the cache of the last ``width`` KVs."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, cfg, x)
+    positions = jnp.arange(S)[None, :]
+    cos, sin = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    out = chunked_attention(q, k, v, causal=True, window=cfg.sliding_window)
+    out = out.reshape(B, S, -1) @ p["wo"]
+    if width >= S:  # straight copy into slots [0, S)
+        pad = width - S
+        cache = {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                 "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))}
+    else:  # ring layout: slot = pos % width for the last `width` positions
+        last_k, last_v = k[:, -width:], v[:, -width:]
+        shift = S % width
+        cache = {"k": jnp.roll(last_k, shift, axis=1),
+                 "v": jnp.roll(last_v, shift, axis=1)}
+    return out, cache
+
+
+def attention_decode(p, cfg, x, cache, pos, *, window=0):
+    """One-token decode. x [B, 1, d]; pos scalar int32 absolute position."""
+    B = x.shape[0]
+    W = cache["k"].shape[1]
+    q, k, v = _qkv(p, cfg, x)
+    cos, sin = rope_angles(pos[None, None], cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    slot = pos % W
+    k_cache = cache["k"].at[:, slot].set(k[:, 0])
+    v_cache = cache["v"].at[:, slot].set(v[:, 0])
+    idx = jnp.arange(W)
+    valid = (idx <= pos) | (pos >= W)
+    if window:
+        w = min(window, W)
+        # ring buffer holds the last W positions; restrict to last `w`
+        age = (slot - idx) % W
+        valid &= age < w
+    out = decode_attention(q, k_cache, v_cache, valid[None, :].repeat(B, 0))
+    out = out.reshape(B, 1, -1) @ p["wo"]
+    return out, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (VLM image layers; enc-dec decoder)
+
+
+def init_cross_attention(rng, cfg, dtype, kv_dim=None):
+    d, hq, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    kv_dim = kv_dim or d
+    ks = jax.random.split(rng, 4)
+    return {"wq": dense_init(ks[0], d, hq * hd, dtype),
+            "wk": dense_init(ks[1], kv_dim, hq * hd, dtype),
+            "wv": dense_init(ks[2], kv_dim, hq * hd, dtype),
+            "wo": dense_init(ks[3], hq * hd, d, dtype),
+            "q_norm": init_norm(hd, "rmsnorm", dtype),
+            "k_norm": init_norm(hd, "rmsnorm", dtype)}
+
+
+def cross_kv(p, cfg, memory):
+    """Precompute cross K/V from encoder/vision memory [B, S_m, kv_dim]."""
+    B, Sm, _ = memory.shape
+    hq, hd = cfg.n_heads, cfg.head_dim
+    k = norm_fwd(p["k_norm"], (memory @ p["wk"]).reshape(B, Sm, hq, hd))
+    v = (memory @ p["wv"]).reshape(B, Sm, hq, hd)
+    return {"k": k, "v": v}
+
+
+def cross_attention_fwd(p, cfg, x, kv):
+    """x [B, S, d] attends over precomputed cross KV (no causality)."""
+    B, S, _ = x.shape
+    hq, hd = cfg.n_heads, cfg.head_dim
+    q = norm_fwd(p["q_norm"], (x @ p["wq"]).reshape(B, S, hq, hd))
+    out = chunked_attention(q, kv["k"], kv["v"], causal=False)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# DeepSeek Multi-head Latent Attention
+
+
+def init_mla(rng, cfg, dtype):
+    m, d, h = cfg.mla, cfg.d_model, cfg.n_heads
+    ks = jax.random.split(rng, 6)
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "wq_a": dense_init(ks[0], d, m.q_lora_rank, dtype),
+        "q_norm": init_norm(m.q_lora_rank, "rmsnorm", dtype),
+        "wq_b": dense_init(ks[1], m.q_lora_rank, h * qk_dim, dtype),
+        "wkv_a": dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_dim, dtype),
+        "kv_norm": init_norm(m.kv_lora_rank, "rmsnorm", dtype),
+        "wk_b": dense_init(ks[3], m.kv_lora_rank, h * m.qk_nope_dim, dtype),
+        "wv_b": dense_init(ks[4], m.kv_lora_rank, h * m.v_head_dim, dtype),
+        "wo": dense_init(ks[5], h * m.v_head_dim, d, dtype),
+    }
+
+
+def _mla_q(p, cfg, x, positions):
+    m, h = cfg.mla, cfg.n_heads
+    B, S, _ = x.shape
+    q = norm_fwd(p["q_norm"], x @ p["wq_a"]) @ p["wq_b"]
+    q = q.reshape(B, S, h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    cos, sin = rope_angles(positions, m.qk_rope_dim, cfg.rope_theta)
+    return q_nope, apply_rope(q_rope, cos, sin)
+
+
+def mla_fwd(p, cfg, x, *, positions=None, window=0):
+    """Train/prefill MLA in decompressed form. Returns (out, latent)."""
+    m, h = cfg.mla, cfg.n_heads
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    kv = x @ p["wkv_a"]
+    c_kv = norm_fwd(p["kv_norm"], kv[..., :m.kv_lora_rank])
+    k_rope = kv[..., m.kv_lora_rank:]
+    cos, sin = rope_angles(positions, m.qk_rope_dim, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)  # 1 shared rope head
+    k_nope = (c_kv @ p["wk_b"]).reshape(B, S, h, m.qk_nope_dim)
+    v = (c_kv @ p["wv_b"]).reshape(B, S, h, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope, (B, S, h, m.qk_rope_dim))], axis=-1)
+    scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    out = chunked_attention(q, k, v, causal=True, window=window, scale=scale)
+    out = out.reshape(B, S, -1) @ p["wo"]
+    latent = jnp.concatenate([c_kv, k_rope[:, :, 0]], axis=-1)
+    return out, latent
+
+
+def init_mla_cache(cfg, batch, width, dtype):
+    m = cfg.mla
+    return {"latent": jnp.zeros((batch, width, m.kv_lora_rank + m.qk_rope_dim),
+                                dtype)}
+
+
+def mla_prefill(p, cfg, x, width):
+    B, S, _ = x.shape
+    out, latent = mla_fwd(p, cfg, x)
+    if width >= S:
+        latent = jnp.pad(latent, ((0, 0), (0, width - S), (0, 0)))
+    else:
+        latent = jnp.roll(latent[:, -width:], S % width, axis=1)
+    return out, {"latent": latent}
+
+
+def mla_decode(p, cfg, x, cache, pos, *, window=0):
+    """Absorbed-form decode: scores/values against the latent cache only."""
+    m, h = cfg.mla, cfg.n_heads
+    B = x.shape[0]
+    W = cache["latent"].shape[1]
+    q_nope, q_rope = _mla_q(p, cfg, x, pos[None, None])
+    kv = x @ p["wkv_a"]
+    c_kv = norm_fwd(p["kv_norm"], kv[..., :m.kv_lora_rank])
+    k_rope = kv[..., m.kv_lora_rank:]
+    cos, sin = rope_angles(pos[None, None], m.qk_rope_dim, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0]
+    new_latent = jnp.concatenate([c_kv, k_rope], axis=-1)[:, 0]
+    slot = pos % W
+    latent = cache["latent"].at[:, slot].set(new_latent)
+    c_cache = latent[..., :m.kv_lora_rank]          # [B, W, r]
+    r_cache = latent[..., m.kv_lora_rank:]          # [B, W, rope]
+    # absorb W_k^b into q: q_eff[b,h,r] = sum_n q_nope[b,h,n] * wk_b[r, h, n]
+    wk_b = p["wk_b"].reshape(m.kv_lora_rank, h, m.qk_nope_dim)
+    q_eff = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0].astype(jnp.float32),
+                       wk_b.astype(jnp.float32))
+    scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    s = jnp.einsum("bhr,bwr->bhw", q_eff, c_cache.astype(jnp.float32))
+    s = s + jnp.einsum("bhr,bwr->bhw", q_rope[:, 0].astype(jnp.float32),
+                       r_cache.astype(jnp.float32))
+    idx = jnp.arange(W)
+    valid = (idx <= pos) | (pos >= W)
+    if window:
+        age = (slot - idx) % W
+        valid &= age < min(window, W)
+    s = jnp.where(valid[None, None], s * scale, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    out_c = jnp.einsum("bhw,bwr->bhr", pr, c_cache.astype(jnp.float32))
+    wv_b = p["wv_b"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bhr,rhv->bhv", out_c, wv_b.astype(jnp.float32))
+    out = out.reshape(B, 1, h * m.v_head_dim).astype(x.dtype) @ p["wo"]
+    return out, {"latent": latent}

@@ -1,0 +1,155 @@
+"""Encoder-decoder backbone (SeamlessM4T style): bidirectional encoder over
+stubbed audio-frame embeddings + causal decoder with per-layer cross-attention.
+
+The audio frontend (mel spectrogram + conv codec) is the allowed stub —
+``input_specs`` supplies frame embeddings [B, n_frames, d_model].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import transformer as tfm
+from repro.models.layers import (embed_fwd, init_embed, init_mlp, init_norm,
+                                 mlp_fwd, norm_fwd, softmax_xent, unembed_fwd)
+from repro.utils.shardutil import constrain_batch
+
+
+def init_enc_block(rng, cfg, dtype):
+    ks = jax.random.split(rng, 2)
+    return {"norm1": init_norm(cfg.d_model, cfg.norm, dtype),
+            "norm2": init_norm(cfg.d_model, cfg.norm, dtype),
+            "attn": attn.init_attention(ks[0], cfg, dtype),
+            "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype)}
+
+
+def init_dec_block(rng, cfg, dtype):
+    ks = jax.random.split(rng, 3)
+    return {"norm1": init_norm(cfg.d_model, cfg.norm, dtype),
+            "norm2": init_norm(cfg.d_model, cfg.norm, dtype),
+            "norm3": init_norm(cfg.d_model, cfg.norm, dtype),
+            "attn": attn.init_attention(ks[0], cfg, dtype),
+            "xattn": attn.init_cross_attention(ks[1], cfg, dtype),
+            "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.act, dtype)}
+
+
+def init_params(rng, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 4)
+    return {
+        "embed": init_embed(ks[0], cfg.vocab, cfg.d_model, dtype, cfg.tie_embeddings),
+        "enc_blocks": tfm._stack_init(
+            ks[1], cfg.encoder_layers, lambda k: init_enc_block(k, cfg, dtype)),
+        "dec_blocks": tfm._stack_init(
+            ks[2], cfg.n_layers, lambda k: init_dec_block(k, cfg, dtype)),
+        "enc_norm": init_norm(cfg.d_model, cfg.norm, dtype),
+        "final_norm": init_norm(cfg.d_model, cfg.norm, dtype),
+    }
+
+
+def param_specs(cfg):
+    return jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+
+
+def encode(params, cfg, src_embeds, mesh=None):
+    """Bidirectional encoder over frame embeddings [B, S_src, d]."""
+    src_embeds = constrain_batch(src_embeds, mesh)
+    def body(h, lp):
+        hn = norm_fwd(lp["norm1"], h, cfg.norm)
+        h = h + attn.attention_fwd(lp["attn"], cfg, hn, causal=False)
+        hn = norm_fwd(lp["norm2"], h, cfg.norm)
+        return h + mlp_fwd(lp["mlp"], hn, cfg.act), None
+
+    h, _ = jax.lax.scan(body, src_embeds, params["enc_blocks"])
+    return norm_fwd(params["enc_norm"], h, cfg.norm)
+
+
+def _dec_block(lp, cfg, h, memory_kv, window=None):
+    hn = norm_fwd(lp["norm1"], h, cfg.norm)
+    h = h + attn.attention_fwd(lp["attn"], cfg, hn, window=window)
+    hn = norm_fwd(lp["norm2"], h, cfg.norm)
+    h = h + attn.cross_attention_fwd(lp["xattn"], cfg, hn, memory_kv)
+    hn = norm_fwd(lp["norm3"], h, cfg.norm)
+    return h + mlp_fwd(lp["mlp"], hn, cfg.act)
+
+
+def loss_fn(params, batch, cfg, mesh=None, n_groups=1):
+    memory = encode(params, cfg, batch["src_embeds"], mesh)
+    h = embed_fwd(params["embed"], batch["tokens"], mesh)
+    h = constrain_batch(h, mesh)
+
+    def body(h, lp):
+        kv = attn.cross_kv(lp["xattn"], cfg, memory)
+        return _dec_block(lp, cfg, h, kv), None
+
+    h, _ = jax.lax.scan(body, h, params["dec_blocks"])
+    hf = norm_fwd(params["final_norm"], h, cfg.norm)
+    logits = unembed_fwd(params["embed"], hf, cfg.tie_embeddings, cfg.vocab)
+    return softmax_xent(logits, batch["labels"], n_groups)
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+
+
+def init_cache(cfg, batch, width):
+    dtype = jnp.dtype(cfg.dtype)
+    L = cfg.n_layers
+    kv = attn.init_kv_cache(cfg, batch, width, dtype)
+    self_kv = jax.tree.map(lambda x: jnp.broadcast_to(x, (L,) + x.shape), kv)
+    hq, hd = cfg.n_heads, cfg.head_dim
+    xkv = jnp.zeros((L, batch, cfg.n_frontend_tokens, hq, hd), dtype)
+    return {"self": self_kv, "cross_k": xkv, "cross_v": xkv}
+
+
+def prefill(params, tokens, src_embeds, cfg, width, mesh=None):
+    """Encode source + prefill decoder self/cross caches."""
+    memory = encode(params, cfg, src_embeds, mesh)
+    h = embed_fwd(params["embed"], tokens, mesh)
+    h = constrain_batch(h, mesh)
+
+    def body(h, lp):
+        kv = attn.cross_kv(lp["xattn"], cfg, memory)
+        hn = norm_fwd(lp["norm1"], h, cfg.norm)
+        o, c = attn.attention_prefill(lp["attn"], cfg, hn, width)
+        h = h + o
+        hn = norm_fwd(lp["norm2"], h, cfg.norm)
+        h = h + attn.cross_attention_fwd(lp["xattn"], cfg, hn, kv)
+        hn = norm_fwd(lp["norm3"], h, cfg.norm)
+        h = h + mlp_fwd(lp["mlp"], hn, cfg.act)
+        return h, (c, kv["k"], kv["v"])
+
+    h, (self_c, xk, xv) = jax.lax.scan(body, h, params["dec_blocks"])
+    hf = norm_fwd(params["final_norm"], h, cfg.norm)
+    logits = unembed_fwd(params["embed"], hf[:, -1:], cfg.tie_embeddings, cfg.vocab)
+    return logits[:, 0], {"self": self_c, "cross_k": xk, "cross_v": xv}
+
+
+def decode_step(params, token, cache, pos, cfg, mesh=None, window=0):
+    from repro.models.layers import chunked_attention
+    h = embed_fwd(params["embed"], token, mesh)
+    hq, hd = cfg.n_heads, cfg.head_dim
+
+    def body(h, inp):
+        lp, c, xk, xv = inp
+        hn = norm_fwd(lp["norm1"], h, cfg.norm)
+        o, nc = attn.attention_decode(lp["attn"], cfg, hn, c, pos,
+                                      window=window)
+        h = h + o
+        hn = norm_fwd(lp["norm2"], h, cfg.norm)
+        B = h.shape[0]
+        q = norm_fwd(lp["xattn"]["q_norm"],
+                     (hn @ lp["xattn"]["wq"]).reshape(B, 1, hq, hd))
+        o = chunked_attention(q, xk, xv, causal=False)
+        h = h + o.reshape(B, 1, -1) @ lp["xattn"]["wo"]
+        hn = norm_fwd(lp["norm3"], h, cfg.norm)
+        return h + mlp_fwd(lp["mlp"], hn, cfg.act), nc
+
+    h, new_self = jax.lax.scan(
+        body, h, (params["dec_blocks"], cache["self"],
+                  cache["cross_k"], cache["cross_v"]))
+    hf = norm_fwd(params["final_norm"], h, cfg.norm)
+    logits = unembed_fwd(params["embed"], hf, cfg.tie_embeddings, cfg.vocab)
+    return logits[:, 0], {"self": new_self, "cross_k": cache["cross_k"],
+                          "cross_v": cache["cross_v"]}

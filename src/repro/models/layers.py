@@ -1,0 +1,261 @@
+"""Shared building blocks: norms, RoPE, MLPs, embeddings, chunked attention.
+
+Everything is functional: ``init_*`` builds a params dict, ``*_fwd`` applies
+it. Params are plain nested dicts so the whole model is a pytree that FedZO's
+estimator can perturb leafwise.
+
+The attention here is the pure-jnp *chunked online-softmax* (flash-style)
+implementation — it never materializes the [S, S] score matrix, which is what
+makes the 32k-prefill dry-runs lowerable. The Pallas kernel in
+``repro.kernels.flash_attention`` is the TPU-runtime twin of this math.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# init helpers
+
+
+def dense_init(rng, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(rng, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def init_norm(d, kind="rmsnorm", dtype=jnp.float32):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_fwd(p, x, kind="rmsnorm", eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+
+
+def rope_angles(positions, head_dim, theta):
+    """positions [*, S] -> (cos, sin) [*, S, head_dim/2] in fp32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [B, S, H, D]; cos/sin [B?, S, D/2] broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    # broadcast [B, S, 1, D/2] over heads
+    c = jnp.expand_dims(cos, -2).astype(jnp.float32)
+    s = jnp.expand_dims(sin, -2).astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+
+
+def init_mlp(rng, d_model, d_ff, act, dtype):
+    ks = jax.random.split(rng, 3)
+    if act in ("swiglu", "geglu"):
+        return {"w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+                "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+                "w_down": dense_init(ks[2], d_ff, d_model, dtype)}
+    return {"w_up": dense_init(ks[0], d_model, d_ff, dtype),
+            "w_down": dense_init(ks[1], d_ff, d_model, dtype)}
+
+
+def _act(h, act):
+    if act == "relu_sq":
+        return jnp.square(jax.nn.relu(h))
+    return {"gelu": jax.nn.gelu, "silu": jax.nn.silu,
+            "swiglu": jax.nn.silu, "geglu": jax.nn.gelu}[act](h)
+
+
+def mlp_fwd(p, x, act):
+    if act in ("swiglu", "geglu"):
+        h = _act(x @ p["w_gate"], act) * (x @ p["w_up"])
+    else:
+        h = _act(x @ p["w_up"], act)
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+
+
+VOCAB_PAD = 32  # pad vocab rows so the table always shards over `model`
+
+
+def padded_vocab(vocab):
+    return vocab + (-vocab) % VOCAB_PAD
+
+
+def init_embed(rng, vocab, d_model, dtype, tie):
+    """Embedding (+ unembedding) with the vocab dim padded to a multiple of
+    VOCAB_PAD: a non-divisible vocab (seamless: 256206) would otherwise leave
+    the logits un-shardable over ``model`` — that single detail cost
+    180 GB/device at train_4k (§Perf iteration 1). Padded logit columns are
+    masked to -inf in unembed_fwd."""
+    vp = padded_vocab(vocab)
+    ks = jax.random.split(rng, 2)
+    p = {"tok": dense_init(ks[0], vp, d_model, dtype, scale=0.02)}
+    if not tie:
+        p["unembed"] = dense_init(ks[1], d_model, vp, dtype)
+    return p
+
+
+def embed_fwd(p, tokens, mesh=None):
+    """Token embedding lookup (vocab-parallel table: rows over ``model``).
+
+    Plain take: with the table sharded P("model", None), GSPMD partitions the
+    gather as a local masked lookup + psum over model — the Megatron
+    vocab-parallel pattern. (Tables sharded on *both* dims crash the XLA
+    partitioner when a manual mesh axis is present; the P("model", None)
+    layout avoids that and matches the vocab-parallel logits matmul.)
+    """
+    del mesh
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed_fwd(p, x, tie, vocab=None):
+    """Logits in param dtype (fp32 accumulation happens inside the loss
+    reductions). Padded vocab columns are masked to a large negative so both
+    the softmax and any argmax sampling ignore them."""
+    w = p["tok"].T if tie else p["unembed"]
+    logits = x @ w
+    vp = logits.shape[-1]
+    if vocab is not None and vocab != vp:
+        v_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+        logits = jnp.where(v_iota < vocab, logits,
+                           jnp.asarray(NEG_INF, logits.dtype))
+    return logits
+
+
+def softmax_xent(logits, labels, n_groups=1):
+    """Token cross-entropy; logits [.., V] (any float), labels int [..].
+
+    The label pick is a masked reduction (iota == label) rather than a
+    take_along_axis: under GSPMD a gather across a model-sharded vocab dim
+    would all-gather the logits (tens of GB/device at 1M tokens); the masked
+    sum partitions as partial-sum + scalar psum. fp32 accumulation happens
+    inside the reductions so no fp32 copy of the logits is materialized.
+
+    ``n_groups > 1`` splits the leading (batch) dim into G groups and returns
+    per-group mean losses [G] — the cross-silo pods of the multi-pod round
+    (each group's tokens live on one pod; the group means are the only
+    cross-pod reduction).
+    """
+    lf = logits.astype(jnp.float32)
+    m = jnp.max(lf, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(lf - m[..., None]), axis=-1))
+    v_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    picked = jnp.where(v_iota == labels[..., None], lf, 0.0)
+    ll = jnp.sum(picked, axis=-1)
+    tok_loss = lse - ll
+    if n_groups == 1:
+        return jnp.mean(tok_loss)
+    return jnp.mean(tok_loss.reshape(n_groups, -1), axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention — pure jnp, partitions under GSPMD.
+
+
+NEG_INF = -1e30
+
+
+def chunked_attention(q, k, v, *, causal, q_offset=0, kv_offset=0,
+                      window=0, kv_chunk=1024, scale=None):
+    """Online-softmax attention without materializing [Sq, Sk] scores.
+
+    q [B, Sq, Hq, D]; k/v [B, Sk, Hkv, D(v)]. GQA via head repetition on the
+    score einsum (no materialized repeat). ``window`` > 0 applies a sliding
+    window over absolute positions; ``*_offset`` give absolute positions of
+    q[0] / k[0].
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, Dv = v.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, Hkv, G, D)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    kv_chunk = min(kv_chunk, Sk)
+    n_chunks = (Sk + kv_chunk - 1) // kv_chunk
+    pad = n_chunks * kv_chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, kv_chunk, Hkv, D)
+    vc = v.reshape(B, n_chunks, kv_chunk, Hkv, Dv)
+
+    def body(carry, inp):
+        m_prev, l_prev, acc = carry
+        ki, vi, ci = inp
+        k_pos = kv_offset + ci * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, ki.astype(jnp.float32))
+        mask = jnp.ones((Sq, kv_chunk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        if pad:
+            mask &= (k_pos < kv_offset + Sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vi.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, Hkv, G, Sq, Dv), jnp.float32)
+    if n_chunks == 1:
+        (m, l, acc), _ = body((m0, l0, acc0),
+                              (kc[:, 0], vc[:, 0], jnp.asarray(0)))
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, acc0),
+            (kc.swapaxes(0, 1), vc.swapaxes(0, 1), jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, Dv)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, length_mask, scale=None):
+    """Single-token attention against a (possibly ring-buffer) cache.
+
+    q [B, 1, Hq, D]; caches [B, W, Hkv, D]; length_mask [B, W] bool marks
+    valid cache slots (handles both unfilled slots and ring-buffer wrap).
+    """
+    B, _, Hq, D = q.shape
+    _, W, Hkv, Dv = v_cache.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32))
+    s = jnp.where(length_mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, Hq, Dv).astype(q.dtype)

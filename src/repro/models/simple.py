@@ -1,0 +1,119 @@
+"""Models for the paper's own experiments (Sec. V).
+
+- ``softmax_regression``: the Fashion-MNIST multinomial classifier of Sec V-B.
+- ``SmallCNN``: a small conv classifier standing in for the pretrained
+  CIFAR-10 network of Carlini & Wagner used in Sec V-A (the container is
+  offline; we train this surrogate in-repo on synthetic CIFAR-like data).
+- ``cw_attack_loss``: the Carlini-Wagner federated black-box attack loss,
+  Eq. (21) — the *optimization variable* is the shared perturbation x, the
+  classifier is a frozen black box.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# softmax regression (Sec V-B)
+
+
+def softmax_init(rng, n_features=784, n_classes=10):
+    return {"w": jnp.zeros((n_features, n_classes), jnp.float32),
+            "b": jnp.zeros((n_classes,), jnp.float32)}
+
+
+def softmax_logits(params, x):
+    return x @ params["w"] + params["b"]
+
+
+def softmax_loss(params, batch):
+    """batch: {"x": [B, F], "y": [B]} -> mean cross-entropy."""
+    logits = softmax_logits(params, batch["x"])
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - ll)
+
+
+def softmax_accuracy(params, batch):
+    pred = jnp.argmax(softmax_logits(params, batch["x"]), axis=-1)
+    return jnp.mean((pred == batch["y"]).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# small CNN classifier (black-box target for the attack task)
+
+
+def cnn_init(rng, n_classes=10, width=16):
+    ks = jax.random.split(rng, 4)
+    def conv(k, cin, cout):
+        return (jax.random.normal(k, (3, 3, cin, cout), jnp.float32)
+                * (2.0 / (9 * cin)) ** 0.5)
+    return {"c1": conv(ks[0], 3, width), "c2": conv(ks[1], width, 2 * width),
+            "w": jax.random.normal(ks[2], (2 * width * 8 * 8, n_classes),
+                                   jnp.float32) * 0.01,
+            "b": jnp.zeros((n_classes,), jnp.float32)}
+
+
+def cnn_logits(params, images):
+    """images [B, 32, 32, 3] in [0, 1] -> logits [B, C]."""
+    h = images * 2.0 - 1.0
+    h = jax.lax.conv_general_dilated(h, params["c1"], (1, 1), "SAME",
+                                     dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    h = jax.nn.relu(h)
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    h = jax.lax.conv_general_dilated(h, params["c2"], (1, 1), "SAME",
+                                     dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    h = jax.nn.relu(h)
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    h = h.reshape(h.shape[0], -1)
+    return h @ params["w"] + params["b"]
+
+
+def cnn_loss(params, batch):
+    logits = cnn_logits(params, batch["x"])
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - ll)
+
+
+# ---------------------------------------------------------------------------
+# Carlini-Wagner federated black-box attack loss (Eq. 21)
+
+
+def _tanh_example(z, x):
+    """Adversarial example 0.5*tanh(atanh(2z-1) + x) in [0,1] image space.
+
+    The paper writes images in [-1/2, 1/2]; we keep [0,1] pixels and map
+    through the same bijection.
+    """
+    z_c = jnp.clip(z * 2.0 - 1.0, -1 + 1e-6, 1 - 1e-6)
+    return 0.5 * (jnp.tanh(jnp.arctanh(z_c) + x) + 1.0)
+
+
+def cw_attack_loss(x_pert, batch, classifier_params, c=1.0):
+    """Eq. (21): mean over the device's images of
+       max(Φ_y(adv) - max_{j≠y} Φ_j(adv), 0) + c‖adv - z‖².
+
+    ``x_pert`` [32*32*3] is the shared perturbation (the FedZO variable);
+    the classifier is queried as a black box (no grad taken through it by
+    the ZO optimizer).
+    """
+    z, y = batch["x"], batch["y"]
+    adv = _tanh_example(z, x_pert.reshape(1, 32, 32, 3))
+    logits = cnn_logits(classifier_params, adv)
+    conf_true = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    masked = logits - 1e9 * jax.nn.one_hot(y, logits.shape[-1])
+    conf_best_other = jnp.max(masked, axis=-1)
+    margin = jnp.maximum(conf_true - conf_best_other, 0.0)
+    dist = jnp.sum(jnp.square(adv - z), axis=(1, 2, 3))
+    return jnp.mean(margin + c * dist)
+
+
+def attack_success(x_pert, batch, classifier_params):
+    z, y = batch["x"], batch["y"]
+    adv = _tanh_example(z, x_pert.reshape(1, 32, 32, 3))
+    pred = jnp.argmax(cnn_logits(classifier_params, adv), axis=-1)
+    return jnp.mean((pred != y).astype(jnp.float32))

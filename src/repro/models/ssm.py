@@ -1,0 +1,252 @@
+"""SSM layers: RWKV-6 time/channel mix and a selective (Mamba-style) SSM.
+
+RWKV-6 WKV (data-dependent per-channel decay, matrix state per head):
+    S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t
+    o_t = r_t · (S_{t-1} + diag(u) k_t ⊗ v_t)
+computed with a *chunked* parallel form: within a chunk of C tokens the
+pairwise factor exp(l_{t-1} − l_j) (l = running log-decay) is formed directly
+inside an einsum — with the log-decay clamped to [−DECAY_CLAMP, −1e−6] per
+step and C=16, every factor stays within fp32 range (worst exponent
+C·DECAY_CLAMP = 64 → e^64 ≈ 6e27 ≪ fp32 max). Chunks are chained by a
+lax.scan carrying the [B, H, dk, dv] state. Decode is the one-step recurrence
+on the cached state — O(1) per token, which is why rwkv6 runs long_500k
+natively.
+
+The selective SSM uses a diagonal state [B, d, n]: intra-chunk
+lax.associative_scan + inter-chunk lax.scan, memory-bounded by the chunk.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, init_norm, norm_fwd
+
+WKV_CHUNK = 16
+DECAY_CLAMP = 4.0
+SSM_CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6
+
+
+def init_rwkv_tmix(rng, cfg, dtype):
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(rng, 10)
+    lora = 64 if d >= 512 else 16
+    return {
+        "mu": 0.5 * jnp.ones((5, d), dtype),        # static lerp for r,k,v,g,w
+        "w0": jnp.zeros((d,), jnp.float32),          # decay bias
+        "w_lora_a": dense_init(ks[0], d, lora, dtype, scale=0.01),
+        "w_lora_b": dense_init(ks[1], lora, d, dtype, scale=0.01),
+        "wr": dense_init(ks[2], d, d, dtype),
+        "wk": dense_init(ks[3], d, d, dtype),
+        "wv": dense_init(ks[4], d, d, dtype),
+        "wg": dense_init(ks[5], d, d, dtype),
+        "wo": dense_init(ks[6], d, d, dtype),
+        "u": jnp.zeros((H, hd), jnp.float32),        # per-head bonus
+        "ln_x": init_norm(d, "layernorm", dtype),    # group-norm on heads out
+    }
+
+
+def _tmix_project(p, cfg, x, x_prev):
+    """Token-shift lerp + projections. x [B, T, d]; x_prev [B, T, d]."""
+    delta = x_prev - x
+    xr, xk, xv, xg, xw = (x + delta * p["mu"][i] for i in range(5))
+    B, T, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    r = (xr @ p["wr"]).reshape(B, T, H, hd)
+    k = (xk @ p["wk"]).reshape(B, T, H, hd)
+    v = (xv @ p["wv"]).reshape(B, T, H, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    # data-dependent decay (the RWKV-6 signature feature)
+    w_raw = p["w0"] + (jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]).astype(jnp.float32)
+    logw = -jnp.exp(w_raw)                           # < 0
+    logw = jnp.clip(logw, -DECAY_CLAMP, -1e-6).reshape(B, T, H, hd)
+    return r, k, v, g, logw
+
+
+def wkv_chunked(r, k, v, logw, u, s0):
+    """Chunked WKV. r/k/v [B, T, H, hd]; logw same; u [H, hd]; s0 [B, H, hd, hd].
+
+    Returns (out [B, T, H, hd], s_final).
+    """
+    B, T, H, hd = r.shape
+    C = min(WKV_CHUNK, T)
+    pad = (-T) % C
+    if pad:  # identity-pad: w=1 (logw=0), k=0 -> state passes through unchanged
+        zpad = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, logw = zpad(r), zpad(k), zpad(v), zpad(logw)
+    T_p = T + pad
+    n = T_p // C
+    rs = r.astype(jnp.float32).reshape(B, n, C, H, hd).transpose(1, 0, 3, 2, 4)
+    ks_ = k.astype(jnp.float32).reshape(B, n, C, H, hd).transpose(1, 0, 3, 2, 4)
+    vs = v.astype(jnp.float32).reshape(B, n, C, H, hd).transpose(1, 0, 3, 2, 4)
+    lw = logw.reshape(B, n, C, H, hd).transpose(1, 0, 3, 2, 4)  # [n,B,H,C,hd]
+
+    tri = jnp.tril(jnp.ones((C, C), bool), k=-1)
+
+    def body(s, inp):
+        rc, kc, vc, lc = inp                       # [B, H, C, hd]
+        l_inc = jnp.cumsum(lc, axis=2)             # inclusive running log decay
+        l_exc = l_inc - lc                         # exclusive (l_{t-1})
+        r_dec = rc * jnp.exp(l_exc)                # decay factors ≤ 1
+        k_grow = kc * jnp.exp(-l_inc)              # bounded by C·CLAMP in exp
+        A = jnp.einsum("bhtd,bhjd->bhtj", r_dec, k_grow)
+        A = jnp.where(tri[None, None], A, 0.0)
+        out = jnp.einsum("bhtj,bhjv->bhtv", A, vc)
+        out = out + jnp.einsum("bhtd,bhdv->bhtv", r_dec, s)       # carry-in
+        diag = jnp.einsum("bhtd,bhtd->bht", rc, kc * u[None, :, None])
+        out = out + diag[..., None] * vc                           # bonus term
+        l_tot = l_inc[:, :, -1:, :]                                # [B,H,1,hd]
+        k_dec = kc * jnp.exp(l_tot - l_inc)
+        s_new = jnp.exp(l_tot[:, :, 0])[..., None] * s + \
+            jnp.einsum("bhjd,bhjv->bhdv", k_dec, vc)
+        return s_new, out
+
+    s_fin, outs = jax.lax.scan(body, s0.astype(jnp.float32), (rs, ks_, vs, lw))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, T_p, H, hd)[:, :T]
+    return out, s_fin
+
+
+def wkv_step(r, k, v, logw, u, s):
+    """One decode step. r/k/v/logw [B, H, hd]; s [B, H, hd, hd]."""
+    kv = jnp.einsum("bhd,bhv->bhdv", k.astype(jnp.float32), v.astype(jnp.float32))
+    out = jnp.einsum("bhd,bhdv->bhv", r.astype(jnp.float32),
+                     s + u[None, ..., None] * kv)
+    s_new = jnp.exp(logw.astype(jnp.float32))[..., None] * s + kv
+    return out, s_new
+
+
+def rwkv_tmix_fwd(p, cfg, x, *, state=None, x_prev_last=None):
+    """Full-sequence time-mix. Returns (out, (s_final, last_x))."""
+    B, T, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    prev0 = jnp.zeros((B, 1, d), x.dtype) if x_prev_last is None \
+        else x_prev_last[:, None, :]
+    x_prev = jnp.concatenate([prev0, x[:, :-1]], axis=1)
+    r, k, v, g, logw = _tmix_project(p, cfg, x, x_prev)
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32) if state is None else state
+    out, s_fin = wkv_chunked(r, k, v, logw, p["u"], s0)
+    out = norm_fwd(p["ln_x"], out.reshape(B, T, d).astype(x.dtype), "layernorm")
+    out = (out * g) @ p["wo"]
+    return out, (s_fin, x[:, -1])
+
+
+def rwkv_tmix_step(p, cfg, x, state, x_prev):
+    """Decode step. x [B, 1, d]; state [B,H,hd,hd]; x_prev [B, d]."""
+    B, _, d = x.shape
+    r, k, v, g, logw = _tmix_project(p, cfg, x, x_prev[:, None])
+    out, s_new = wkv_step(r[:, 0], k[:, 0], v[:, 0], logw[:, 0], p["u"], state)
+    out = norm_fwd(p["ln_x"], out.reshape(B, 1, d).astype(x.dtype), "layernorm")
+    out = (out * g) @ p["wo"]
+    return out, (s_new, x[:, 0])
+
+
+def init_rwkv_cmix(rng, cfg, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(rng, 3)
+    return {"mu_k": 0.5 * jnp.ones((d,), dtype),
+            "mu_r": 0.5 * jnp.ones((d,), dtype),
+            "wk": dense_init(ks[0], d, cfg.d_ff, dtype),
+            "wv": dense_init(ks[1], cfg.d_ff, d, dtype),
+            "wr": dense_init(ks[2], d, d, dtype)}
+
+
+def rwkv_cmix_fwd(p, x, x_prev):
+    """Channel mix with token shift. x, x_prev [B, T, d]."""
+    delta = x_prev - x
+    xk = x + delta * p["mu_k"]
+    xr = x + delta * p["mu_r"]
+    h = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (h @ p["wv"])
+
+
+# ---------------------------------------------------------------------------
+# Selective (Mamba-style) diagonal SSM — used by the Hymba hybrid.
+
+
+def init_mamba(rng, cfg, dtype):
+    d, n = cfg.d_model, cfg.ssm_state
+    ks = jax.random.split(rng, 6)
+    return {
+        "w_in": dense_init(ks[0], d, 2 * d, dtype),     # x and gate z
+        "w_bcdt": dense_init(ks[1], d, 2 * n + 1, dtype),
+        "a_log": jnp.zeros((d, n), jnp.float32),         # A = -exp(a_log)
+        "dt_bias": jnp.zeros((d,), jnp.float32),
+        "d_skip": jnp.ones((d,), jnp.float32),
+        "w_out": dense_init(ks[2], d, d, dtype),
+    }
+
+
+def _mamba_abc(p, xz):
+    """Common projections. xz [B, T, d] (the `x` branch, pre-SSM)."""
+    n = p["a_log"].shape[1]
+    bcdt = xz @ p["w_bcdt"]
+    Bm, Cm, dt = bcdt[..., :n], bcdt[..., n:2 * n], bcdt[..., 2 * n]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].mean())[..., None]
+    A = -jnp.exp(p["a_log"])                                 # [d, n], < 0
+    a = jnp.exp(dt[..., None] * A)                           # [B,T,d,n] decay
+    b = (dt * Bm.astype(jnp.float32))[:, :, None, :] * xz.astype(jnp.float32)[..., None]
+    return a, b, Cm
+
+
+def diag_ssm_scan(a, b, s0, chunk=SSM_CHUNK):
+    """h_t = a_t ⊙ h_{t-1} + b_t over T; a,b [B,T,d,n]; s0 [B,d,n].
+
+    Intra-chunk associative_scan, inter-chunk lax.scan (bounds peak memory to
+    O(chunk · d · n)). Returns (h [B,T,d,n], s_final).
+    """
+    B, T, d, n = a.shape
+    C = min(chunk, T)
+    pad = (-T) % C
+    if pad:  # identity elements: a=1, b=0
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    T_p = T + pad
+    nc = T_p // C
+    a_c = a.reshape(B, nc, C, d, n).transpose(1, 0, 2, 3, 4)
+    b_c = b.reshape(B, nc, C, d, n).transpose(1, 0, 2, 3, 4)
+
+    def combine(e1, e2):
+        (a1, b1), (a2, b2) = e1, e2
+        return a2 * a1, a2 * b1 + b2
+
+    def body(s, inp):
+        ac, bc = inp                        # [B, C, d, n]
+        aa, bb = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h = aa * s[:, None] + bb
+        return h[:, -1], h
+
+    s_fin, hs = jax.lax.scan(body, s0, (a_c, b_c))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, T_p, d, n)[:, :T]
+    return h, s_fin
+
+
+def mamba_fwd(p, cfg, x, *, state=None):
+    """Full-sequence selective SSM. x [B, T, d] -> (out, s_final)."""
+    B, T, d = x.shape
+    xz = x @ p["w_in"]
+    xs, z = xz[..., :d], xz[..., d:]
+    xs = jax.nn.silu(xs)
+    a, b, Cm = _mamba_abc(p, xs)
+    s0 = jnp.zeros((B, d, cfg.ssm_state), jnp.float32) if state is None else state
+    h, s_fin = diag_ssm_scan(a, b, s0)
+    y = jnp.einsum("btdn,btn->btd", h, Cm.astype(jnp.float32))
+    y = y + p["d_skip"] * xs.astype(jnp.float32)
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["w_out"]
+    return out, s_fin
+
+
+def mamba_step(p, cfg, x, state):
+    """One decode step. x [B, 1, d]; state [B, d, n]."""
+    B, _, d = x.shape
+    xz = x @ p["w_in"]
+    xs, z = jax.nn.silu(xz[..., :d]), xz[..., d:]
+    a, b, Cm = _mamba_abc(p, xs)
+    s_new = a[:, 0] * state + b[:, 0]
+    y = jnp.einsum("bdn,bn->bd", s_new, Cm[:, 0].astype(jnp.float32))
+    y = y + p["d_skip"] * xs[:, 0].astype(jnp.float32)
+    out = (y[:, None].astype(x.dtype) * jax.nn.silu(z)) @ p["w_out"]
+    return out, s_new

@@ -1,0 +1,345 @@
+"""Decoder-only transformer assembly for the dense / moe / hybrid / ssm families.
+
+Layers are *stacked* (one pytree with a leading [L] axis per leaf) and driven
+by ``jax.lax.scan`` so the HLO stays O(1) in depth — this is what keeps the
+100-layer dry-run compiles fast. Heterogeneous stacks (DeepSeek's 3 leading
+dense layers, Hymba's parallel branches) are separate stacked groups.
+
+Three entry points per model:
+  loss(params, batch, cfg, mesh)           — train forward (FedZO queries this)
+  prefill(params, tokens, cfg, width, mesh) — build decode caches
+  decode(params, token, cache, pos, cfg, mesh) — one token, updates caches
+
+FedZO never calls jax.grad, so there is no remat policy here: forward-only
+training IS the paper's memory story (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ssm
+from repro.models.layers import (embed_fwd, init_embed, init_mlp, init_norm,
+                                 mlp_fwd, norm_fwd, softmax_xent, unembed_fwd)
+from repro.models.moe import init_moe, moe_fwd
+from repro.utils.shardutil import constrain, constrain_batch, dp_axes
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+
+
+def init_block(rng, cfg, dtype, *, moe_layer=False):
+    ks = jax.random.split(rng, 4)
+    p = {"norm1": init_norm(cfg.d_model, cfg.norm, dtype),
+         "norm2": init_norm(cfg.d_model, cfg.norm, dtype)}
+    if cfg.family == "ssm":  # rwkv6
+        p["tmix"] = ssm.init_rwkv_tmix(ks[0], cfg, dtype)
+        p["cmix"] = ssm.init_rwkv_cmix(ks[1], cfg, dtype)
+        return p
+    if cfg.mla is not None:
+        p["attn"] = attn.init_mla(ks[0], cfg, dtype)
+    else:
+        p["attn"] = attn.init_attention(ks[0], cfg, dtype)
+    if cfg.family == "hybrid":
+        p["mamba"] = ssm.init_mamba(ks[1], cfg, dtype)
+    if moe_layer:
+        p["moe"] = init_moe(ks[2], cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def _stack_init(rng, n, init_fn):
+    if n == 0:
+        return None
+    ps = [init_fn(jax.random.fold_in(rng, i)) for i in range(n)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+
+
+def init_params(rng, cfg):
+    dtype = _dtype(cfg)
+    ks = jax.random.split(rng, 6)
+    p = {"embed": init_embed(ks[0], cfg.vocab, cfg.d_model, dtype,
+                             cfg.tie_embeddings),
+         "final_norm": init_norm(cfg.d_model, cfg.norm, dtype)}
+    n_moe = 0
+    if cfg.n_experts:
+        n_moe = cfg.n_layers - cfg.n_dense_layers
+        p["dense_blocks"] = _stack_init(
+            ks[1], cfg.n_dense_layers,
+            lambda k: init_block(k, cfg, dtype, moe_layer=False))
+        p["moe_blocks"] = _stack_init(
+            ks[2], n_moe, lambda k: init_block(k, cfg, dtype, moe_layer=True))
+    else:
+        p["blocks"] = _stack_init(
+            ks[1], cfg.n_layers, lambda k: init_block(k, cfg, dtype))
+    if cfg.mtp:
+        p["mtp_block"] = init_block(ks[3], cfg, dtype, moe_layer=False)
+        p["mtp_norm"] = init_norm(cfg.d_model, cfg.norm, dtype)
+    return p
+
+
+def param_specs(cfg):
+    """ShapeDtypeStructs of the params — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# block forward (full sequence)
+
+
+def block_fwd(p, cfg, h, mesh, *, moe_layer=False, window=None):
+    """Pre-norm block on h [B, S, d]. Returns (h, aux)."""
+    h = constrain_batch(h, mesh)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        o, _ = ssm.rwkv_tmix_fwd(p["tmix"], cfg, norm_fwd(p["norm1"], h, cfg.norm))
+        h = h + o
+        hn = norm_fwd(p["norm2"], h, cfg.norm)
+        B, T, d = hn.shape
+        prev = jnp.concatenate([jnp.zeros((B, 1, d), hn.dtype), hn[:, :-1]], 1)
+        h = h + ssm.rwkv_cmix_fwd(p["cmix"], hn, prev)
+        return h, aux
+
+    hn = norm_fwd(p["norm1"], h, cfg.norm)
+    if cfg.mla is not None:
+        o, _ = attn.mla_fwd(p["attn"], cfg, hn,
+                            window=(window or 0))
+    else:
+        o = attn.attention_fwd(p["attn"], cfg, hn, window=window)
+    if cfg.family == "hybrid":
+        o2, _ = ssm.mamba_fwd(p["mamba"], cfg, hn)
+        o = 0.5 * (o + o2)
+    h = h + o
+    hn = norm_fwd(p["norm2"], h, cfg.norm)
+    if moe_layer:
+        o, aux = moe_fwd(p["moe"], cfg, hn, mesh=mesh)
+    else:
+        o = mlp_fwd(p["mlp"], hn, cfg.act)
+    return h + o, aux
+
+
+def _scan_blocks(stacked, cfg, h, mesh, *, moe_layer=False, window=None):
+    if stacked is None:
+        return h, jnp.zeros((), jnp.float32)
+
+    def body(carry, lp):
+        h, aux = carry
+        h, a = block_fwd(lp, cfg, h, mesh, moe_layer=moe_layer, window=window)
+        return (h, aux + a), None
+
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)), stacked)
+    return h, aux
+
+
+def backbone(params, cfg, h, mesh, *, window=None):
+    """Embeddings already applied; h [B, S, d] -> (h_normed, aux)."""
+    if cfg.n_experts:
+        h, a1 = _scan_blocks(params.get("dense_blocks"), cfg, h, mesh,
+                             window=window)
+        h, a2 = _scan_blocks(params["moe_blocks"], cfg, h, mesh,
+                             moe_layer=True, window=window)
+        aux = a1 + a2
+    else:
+        h, aux = _scan_blocks(params["blocks"], cfg, h, mesh, window=window)
+    return norm_fwd(params["final_norm"], h, cfg.norm), aux
+
+
+def loss_fn(params, batch, cfg, mesh=None, n_groups=1):
+    """Mean next-token cross entropy (+ MoE aux, + MTP aux). FedZO's F(x, ξ).
+
+    ``n_groups > 1`` returns per-pod-group losses [G] (multi-pod round)."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    h = embed_fwd(params["embed"], tokens, mesh)
+    h = constrain_batch(h, mesh)
+    if cfg.d_model >= 1024:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)  # gemma-style scale
+    hf, aux = backbone(params, cfg, h, mesh)
+    logits = unembed_fwd(params["embed"], hf, cfg.tie_embeddings, cfg.vocab)
+    logits = constrain(logits, mesh, dp_axes(mesh), None, "model") \
+        if mesh is not None else logits
+    loss = softmax_xent(logits, labels, n_groups)
+    if cfg.mtp:
+        # multi-token prediction: one extra block predicts token t+2 from
+        # (h_t, embed(token_{t+1})) — DeepSeek-V3 style, depth 1.
+        emb_next = jnp.concatenate([h[:, 1:], h[:, -1:]], axis=1)
+        h2 = norm_fwd(params["mtp_norm"], hf + emb_next, cfg.norm)
+        h2, _ = block_fwd(params["mtp_block"], cfg, h2, mesh)
+        logits2 = unembed_fwd(params["embed"], h2, cfg.tie_embeddings, cfg.vocab)
+        labels2 = jnp.concatenate([labels[:, 1:], labels[:, -1:]], axis=1)
+        loss = loss + 0.3 * softmax_xent(logits2, labels2, n_groups)
+    return loss + aux
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode with caches
+
+
+def init_cache(cfg, batch, width):
+    """Zeroed decode cache for one block family, stacked over layers."""
+    dtype = _dtype(cfg)
+    d = cfg.d_model
+
+    def one(moe_layer=False):
+        if cfg.family == "ssm":
+            return {"s": jnp.zeros((batch, cfg.n_heads, cfg.head_dim,
+                                    cfg.head_dim), jnp.float32),
+                    "ts_att": jnp.zeros((batch, d), dtype),
+                    "ts_ffn": jnp.zeros((batch, d), dtype)}
+        if cfg.mla is not None:
+            c = attn.init_mla_cache(cfg, batch, width, dtype)
+        else:
+            c = attn.init_kv_cache(cfg, batch, width, dtype)
+        if cfg.family == "hybrid":
+            c["s"] = jnp.zeros((batch, d, cfg.ssm_state), jnp.float32)
+        return c
+
+    def stack(n, **kw):
+        if n == 0:
+            return None
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape),
+                            one(**kw))
+
+    if cfg.n_experts:
+        return {"dense": stack(cfg.n_dense_layers),
+                "moe": stack(cfg.n_layers - cfg.n_dense_layers)}
+    return {"blocks": stack(cfg.n_layers)}
+
+
+def block_prefill(p, cfg, h, width, mesh, *, moe_layer=False):
+    """Full-seq forward that also returns this block's decode cache."""
+    h = constrain_batch(h, mesh)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        hn = norm_fwd(p["norm1"], h, cfg.norm)
+        o, (s, last1) = ssm.rwkv_tmix_fwd(p["tmix"], cfg, hn)
+        h = h + o
+        hn = norm_fwd(p["norm2"], h, cfg.norm)
+        B, T, d = hn.shape
+        prev = jnp.concatenate([jnp.zeros((B, 1, d), hn.dtype), hn[:, :-1]], 1)
+        h = h + ssm.rwkv_cmix_fwd(p["cmix"], hn, prev)
+        return h, {"s": s, "ts_att": last1, "ts_ffn": hn[:, -1]}, aux
+
+    hn = norm_fwd(p["norm1"], h, cfg.norm)
+    if cfg.mla is not None:
+        o, cache = attn.mla_prefill(p["attn"], cfg, hn, width)
+    else:
+        o, cache = attn.attention_prefill(p["attn"], cfg, hn, width)
+    if cfg.family == "hybrid":
+        o2, s = ssm.mamba_fwd(p["mamba"], cfg, hn)
+        o = 0.5 * (o + o2)
+        cache["s"] = s
+    h = h + o
+    hn = norm_fwd(p["norm2"], h, cfg.norm)
+    if moe_layer:
+        o, aux = moe_fwd(p["moe"], cfg, hn, mesh=mesh)
+    else:
+        o = mlp_fwd(p["mlp"], hn, cfg.act)
+    return h + o, cache, aux
+
+
+def block_decode(p, cfg, h, cache, pos, mesh, *, moe_layer=False, window=0):
+    h = constrain_batch(h, mesh)
+    if cfg.family == "ssm":
+        hn = norm_fwd(p["norm1"], h, cfg.norm)
+        o, (s, last1) = ssm.rwkv_tmix_step(p["tmix"], cfg, hn, cache["s"],
+                                           cache["ts_att"])
+        h = h + o
+        hn = norm_fwd(p["norm2"], h, cfg.norm)
+        h = h + ssm.rwkv_cmix_fwd(p["cmix"], hn, cache["ts_ffn"][:, None])
+        return h, {"s": s, "ts_att": last1, "ts_ffn": hn[:, 0]}
+
+    hn = norm_fwd(p["norm1"], h, cfg.norm)
+    if cfg.mla is not None:
+        o, new_cache = attn.mla_decode(p["attn"], cfg, hn,
+                                       {"latent": cache["latent"]}, pos,
+                                       window=window)
+    else:
+        o, new_cache = attn.attention_decode(
+            p["attn"], cfg, hn, {"k": cache["k"], "v": cache["v"]}, pos,
+            window=window or cfg.sliding_window)
+    if cfg.family == "hybrid":
+        o2, s = ssm.mamba_step(p["mamba"], cfg, hn, cache["s"])
+        o = 0.5 * (o + o2)
+        new_cache["s"] = s
+    h = h + o
+    hn = norm_fwd(p["norm2"], h, cfg.norm)
+    if moe_layer:
+        o, _ = moe_fwd(p["moe"], cfg, hn, mesh=mesh)
+    else:
+        o = mlp_fwd(p["mlp"], hn, cfg.act)
+    return h + o, new_cache
+
+
+def _scan_prefill(stacked, cfg, h, width, mesh, **kw):
+    if stacked is None:
+        return h, None, jnp.zeros((), jnp.float32)
+
+    def body(carry, lp):
+        h, aux = carry
+        h, cache, a = block_prefill(lp, cfg, h, width, mesh, **kw)
+        return (h, aux + a), cache
+
+    (h, aux), caches = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                                    stacked)
+    return h, caches, aux
+
+
+def _scan_decode(stacked, caches, cfg, h, pos, mesh, **kw):
+    if stacked is None:
+        return h, None
+
+    def body(h, inp):
+        lp, c = inp
+        h, nc = block_decode(lp, cfg, h, c, pos, mesh, **kw)
+        return h, nc
+
+    return jax.lax.scan(body, h, (stacked, caches))
+
+
+def prefill(params, tokens, cfg, width, mesh=None):
+    """tokens [B, S] -> (last-token logits [B, V], cache)."""
+    h = embed_fwd(params["embed"], tokens, mesh)
+    h = constrain_batch(h, mesh)
+    if cfg.d_model >= 1024:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    if cfg.n_experts:
+        h, c1, _ = _scan_prefill(params.get("dense_blocks"), cfg, h, width, mesh)
+        h, c2, _ = _scan_prefill(params["moe_blocks"], cfg, h, width, mesh,
+                                 moe_layer=True)
+        cache = {"dense": c1, "moe": c2}
+    else:
+        h, c, _ = _scan_prefill(params["blocks"], cfg, h, width, mesh)
+        cache = {"blocks": c}
+    hf = norm_fwd(params["final_norm"], h, cfg.norm)
+    logits = unembed_fwd(params["embed"], hf[:, -1:], cfg.tie_embeddings, cfg.vocab)
+    return logits[:, 0], cache
+
+
+def decode_step(params, token, cache, pos, cfg, mesh=None, window=0):
+    """token [B, 1] int32; pos scalar int32 -> (logits [B, V], new cache)."""
+    h = embed_fwd(params["embed"], token, mesh)
+    h = constrain_batch(h, mesh)
+    if cfg.d_model >= 1024:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    if cfg.n_experts:
+        h, c1 = _scan_decode(params.get("dense_blocks"), cache["dense"], cfg,
+                             h, pos, mesh, window=window)
+        h, c2 = _scan_decode(params["moe_blocks"], cache["moe"], cfg, h, pos,
+                             mesh, moe_layer=True, window=window)
+        new_cache = {"dense": c1, "moe": c2}
+    else:
+        h, c = _scan_decode(params["blocks"], cache["blocks"], cfg, h, pos,
+                            mesh, window=window)
+        new_cache = {"blocks": c}
+    hf = norm_fwd(params["final_norm"], h, cfg.norm)
+    logits = unembed_fwd(params["embed"], hf, cfg.tie_embeddings, cfg.vocab)
+    return logits[:, 0], new_cache

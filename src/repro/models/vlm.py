@@ -1,0 +1,174 @@
+"""VLM backbone (Llama-3.2-Vision style): self-attn decoder with interleaved
+gated cross-attention layers consuming stubbed vision embeddings.
+
+Structure: G groups of (cross_attn_every - 1) self layers + 1 gated cross
+layer, scanned over groups (outer) and self layers (inner). The vision
+frontend (ViT + projector) is the allowed stub — ``input_specs`` supplies
+post-projector patch embeddings [B, n_img, d_model].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import transformer as tfm
+from repro.models.layers import (embed_fwd, init_embed, init_mlp, init_norm,
+                                 mlp_fwd, norm_fwd, softmax_xent, unembed_fwd)
+from repro.utils.shardutil import constrain, constrain_batch, dp_axes
+
+
+def _n_groups(cfg):
+    assert cfg.n_layers % cfg.cross_attn_every == 0
+    return cfg.n_layers // cfg.cross_attn_every
+
+
+def init_cross_block(rng, cfg, dtype):
+    ks = jax.random.split(rng, 3)
+    return {"norm1": init_norm(cfg.d_model, cfg.norm, dtype),
+            "norm2": init_norm(cfg.d_model, cfg.norm, dtype),
+            "xattn": attn.init_cross_attention(ks[0], cfg, dtype),
+            "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype),
+            "gate_attn": jnp.zeros((), jnp.float32),
+            "gate_mlp": jnp.zeros((), jnp.float32)}
+
+
+def init_params(rng, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    G = _n_groups(cfg)
+    n_self = cfg.cross_attn_every - 1
+    ks = jax.random.split(rng, 4)
+
+    def group(k):
+        return tfm._stack_init(k, n_self, lambda kk: tfm.init_block(kk, cfg, dtype))
+
+    return {
+        "embed": init_embed(ks[0], cfg.vocab, cfg.d_model, dtype, cfg.tie_embeddings),
+        "final_norm": init_norm(cfg.d_model, cfg.norm, dtype),
+        "self_blocks": tfm._stack_init(ks[1], G, group),        # [G, n_self, ...]
+        "cross_blocks": tfm._stack_init(
+            ks[2], G, lambda k: init_cross_block(k, cfg, dtype)),  # [G, ...]
+    }
+
+
+def param_specs(cfg):
+    return jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+
+
+def cross_block_fwd(p, cfg, h, vision):
+    hn = norm_fwd(p["norm1"], h, cfg.norm)
+    kv = attn.cross_kv(p["xattn"], cfg, vision)
+    ga = jnp.tanh(p["gate_attn"]).astype(h.dtype)  # keep the carry dtype
+    gm = jnp.tanh(p["gate_mlp"]).astype(h.dtype)
+    h = h + ga * attn.cross_attention_fwd(p["xattn"], cfg, hn, kv)
+    hn = norm_fwd(p["norm2"], h, cfg.norm)
+    return h + gm * mlp_fwd(p["mlp"], hn, cfg.act)
+
+
+def backbone(params, cfg, h, vision, mesh=None, window=None):
+    def group_body(h, lp):
+        selfs, cross = lp
+
+        def self_body(h, sp):
+            h, _ = tfm.block_fwd(sp, cfg, h, mesh, window=window)
+            return h, None
+
+        h, _ = jax.lax.scan(self_body, h, selfs)
+        h = cross_block_fwd(cross, cfg, h, vision)
+        return constrain_batch(h, mesh), None
+
+    h, _ = jax.lax.scan(group_body, h,
+                        (params["self_blocks"], params["cross_blocks"]))
+    return norm_fwd(params["final_norm"], h, cfg.norm)
+
+
+def loss_fn(params, batch, cfg, mesh=None, n_groups=1):
+    h = embed_fwd(params["embed"], batch["tokens"], mesh)
+    h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    h = constrain_batch(h, mesh)
+    hf = backbone(params, cfg, h, batch["vision_embeds"], mesh)
+    logits = unembed_fwd(params["embed"], hf, cfg.tie_embeddings, cfg.vocab)
+    return softmax_xent(logits, batch["labels"], n_groups)
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+
+
+def init_cache(cfg, batch, width):
+    dtype = jnp.dtype(cfg.dtype)
+    G = _n_groups(cfg)
+    n_self = cfg.cross_attn_every - 1
+    kv = attn.init_kv_cache(cfg, batch, width, dtype)
+    self_kv = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (G, n_self) + x.shape), kv)
+    hq, hd = cfg.n_heads, cfg.head_dim
+    xkv = jnp.zeros((G, batch, cfg.n_frontend_tokens, hq, hd), dtype)
+    return {"self": self_kv, "cross_k": xkv, "cross_v": xkv}
+
+
+def prefill(params, tokens, vision, cfg, width, mesh=None):
+    h = embed_fwd(params["embed"], tokens, mesh)
+    h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+
+    def group_body(h, lp):
+        selfs, cross = lp
+
+        def self_body(h, sp):
+            hn = norm_fwd(sp["norm1"], h, cfg.norm)
+            o, c = attn.attention_prefill(sp["attn"], cfg, hn, width)
+            h = h + o
+            hn = norm_fwd(sp["norm2"], h, cfg.norm)
+            h = h + mlp_fwd(sp["mlp"], hn, cfg.act)
+            return h, c
+
+        h, self_c = jax.lax.scan(self_body, h, selfs)
+        kv = attn.cross_kv(cross["xattn"], cfg, vision)
+        h = cross_block_fwd(cross, cfg, h, vision)
+        return h, (self_c, kv["k"], kv["v"])
+
+    h, (self_c, xk, xv) = jax.lax.scan(
+        group_body, h, (params["self_blocks"], params["cross_blocks"]))
+    hf = norm_fwd(params["final_norm"], h, cfg.norm)
+    logits = unembed_fwd(params["embed"], hf[:, -1:], cfg.tie_embeddings, cfg.vocab)
+    return logits[:, 0], {"self": self_c, "cross_k": xk, "cross_v": xv}
+
+
+def decode_step(params, token, cache, pos, cfg, mesh=None, window=0):
+    h = embed_fwd(params["embed"], token, mesh)
+    h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+
+    def group_body(h, lp):
+        selfs, cross, self_c, xk, xv = lp
+
+        def self_body(h, inp):
+            sp, c = inp
+            hn = norm_fwd(sp["norm1"], h, cfg.norm)
+            o, nc = attn.attention_decode(sp["attn"], cfg, hn, c, pos,
+                                          window=window)
+            h = h + o
+            hn = norm_fwd(sp["norm2"], h, cfg.norm)
+            return h + mlp_fwd(sp["mlp"], hn, cfg.act), nc
+
+        h, new_self = jax.lax.scan(self_body, h, (selfs, self_c))
+        hn = norm_fwd(cross["norm1"], h, cfg.norm)
+        B = h.shape[0]
+        hq, hd = cfg.n_heads, cfg.head_dim
+        q = norm_fwd(cross["xattn"]["q_norm"],
+                     (hn @ cross["xattn"]["wq"]).reshape(B, 1, hq, hd))
+        from repro.models.layers import chunked_attention
+        o = chunked_attention(q, xk, xv, causal=False)
+        h = h + jnp.tanh(cross["gate_attn"]).astype(h.dtype) * (
+            o.reshape(B, 1, -1) @ cross["xattn"]["wo"])
+        hn = norm_fwd(cross["norm2"], h, cfg.norm)
+        h = h + jnp.tanh(cross["gate_mlp"]).astype(h.dtype) *             mlp_fwd(cross["mlp"], hn, cfg.act)
+        return h, new_self
+
+    h, new_self = jax.lax.scan(
+        group_body, h,
+        (params["self_blocks"], params["cross_blocks"],
+         cache["self"], cache["cross_k"], cache["cross_v"]))
+    hf = norm_fwd(params["final_norm"], h, cfg.norm)
+    logits = unembed_fwd(params["embed"], hf, cfg.tie_embeddings, cfg.vocab)
+    return logits[:, 0], {"self": new_self, "cross_k": cache["cross_k"],
+                          "cross_v": cache["cross_v"]}

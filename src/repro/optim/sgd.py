@@ -1,0 +1,58 @@
+"""Optimizers for the first-order baselines and server-side adaptivity.
+
+FedZO itself is optimizer-free (the update is the estimator step); these are
+used by FedAvg locally and optionally by the server on aggregated deltas
+("FedOpt"-style server optimizer, off by default to stay paper-faithful).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_axpy, tree_zeros_like
+
+
+class SGDState(NamedTuple):
+    momentum: object
+
+
+def sgd_init(params, momentum=0.0):
+    return SGDState(tree_zeros_like(params) if momentum else None)
+
+
+def sgd_apply(params, grads, state: SGDState, *, lr, momentum=0.0):
+    if momentum and state.momentum is not None:
+        m = jax.tree.map(lambda mo, g: momentum * mo + g, state.momentum, grads)
+        return tree_axpy(-lr, m, params), SGDState(m)
+    return tree_axpy(-lr, grads, params), state
+
+
+class AdamState(NamedTuple):
+    mu: object
+    nu: object
+    count: jnp.ndarray
+
+
+def adam_init(params):
+    return AdamState(tree_zeros_like(params), tree_zeros_like(params),
+                     jnp.zeros((), jnp.int32))
+
+
+def adam_apply(params, grads, state: AdamState, *, lr, b1=0.9, b2=0.999,
+               eps=1e-8):
+    c = state.count + 1
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda n, g: b2 * n + (1 - b2) * g * g, state.nu, grads)
+    cf = c.astype(jnp.float32)
+    s1, s2 = 1 - b1 ** cf, 1 - b2 ** cf
+    upd = jax.tree.map(lambda m, n: (m / s1) / (jnp.sqrt(n / s2) + eps), mu, nu)
+    return tree_axpy(-lr, upd, params), AdamState(mu, nu, c)
+
+
+def cosine_lr(step, *, base_lr, total_steps, warmup=0):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0) if warmup else 1.0
+    t = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0, 1)
+    return base_lr * warm * 0.5 * (1 + jnp.cos(jnp.pi * t))

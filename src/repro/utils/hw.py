@@ -1,0 +1,34 @@
+"""Hardware constants for the roofline analysis (TPU v5e, the target platform).
+
+The container runs on CPU; these constants are used only to convert the
+dry-run's compiled cost analysis into roofline *seconds* per chip.
+"""
+
+# Peak dense bf16 matmul throughput per chip.
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+
+# HBM bandwidth per chip.
+HBM_BW = 819e9  # B/s
+
+# Inter-chip interconnect, per link. v5e has a 2D torus with 4 links/chip;
+# we report the conservative single-link figure and note the 4-link upper
+# bound in EXPERIMENTS.md where it changes the dominant term.
+ICI_BW_PER_LINK = 50e9   # B/s
+ICI_LINKS_PER_CHIP = 4
+
+HBM_PER_CHIP = 16 * 1024 ** 3  # 16 GiB
+
+
+def roofline_seconds(flops: float, hbm_bytes: float, coll_bytes: float,
+                     chips: int, ici_links: int = 1):
+    """Three roofline terms in seconds (per the assignment's formulas).
+
+    flops / hbm_bytes / coll_bytes are *totals across the mesh*; cost_analysis
+    on an SPMD-compiled module reports per-device numbers, in which case pass
+    chips=1 here (callers document which convention they use).
+    """
+    return {
+        "compute_s": flops / (chips * PEAK_FLOPS_BF16),
+        "memory_s": hbm_bytes / (chips * HBM_BW),
+        "collective_s": coll_bytes / (chips * ICI_BW_PER_LINK * ici_links),
+    }

@@ -1,0 +1,56 @@
+"""Sharding-constraint helper usable both at top level and inside
+partial-manual shard_map regions (e.g. the multi-pod ``pod`` axis).
+
+Inside a manual region, constraints must be expressed on the *context
+abstract mesh* and may only reference auto axes — ``constrain`` detects the
+context, strips manual axes from the spec, and otherwise falls back to the
+concrete mesh passed by the caller. No-op when mesh is None (CPU smoke)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh):
+    """The batch ('data-parallel') axes present in a mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _env_mesh(mesh):
+    try:
+        ctx = jax.sharding.get_abstract_mesh()
+        if ctx is not None and ctx.axis_names:
+            manual = {n for n, t in zip(ctx.axis_names, ctx.axis_types)
+                      if "Manual" in str(t)}
+            return ctx, manual
+    except Exception:  # noqa: BLE001 — fall back to caller's mesh
+        pass
+    return mesh, set()
+
+
+def constrain(x, mesh, *spec):
+    """with_sharding_constraint(x, P(*spec)) with manual axes stripped.
+
+    Spec entries may be axis names, tuples of axis names, or None.
+    """
+    if mesh is None:
+        return x
+    m, manual = _env_mesh(mesh)
+
+    def strip(s):
+        if s is None:
+            return None
+        if isinstance(s, (tuple, list)):
+            t = tuple(a for a in s if a not in manual and a in m.axis_names)
+            return t if t else None
+        return None if (s in manual or s not in m.axis_names) else s
+
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(m, P(*[strip(s) for s in spec])))
+
+
+def constrain_batch(x, mesh):
+    """Leading dim over (pod, data), rest replicated."""
+    if mesh is None:
+        return x
+    return constrain(x, mesh, dp_axes(mesh), *([None] * (x.ndim - 1)))

@@ -1,0 +1,28 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_subprocess(code: str, n_devices: int = 8, timeout: int = 600):
+    """Run a python snippet with a fake multi-device CPU (XLA flags must be
+    set before jax init, so multi-device tests run out-of-process)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    if res.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:{res.stdout[-4000:]}\n"
+            f"STDERR:{res.stderr[-4000:]}")
+    return res.stdout
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import jax
+    return jax.random.key(0)

@@ -1,0 +1,96 @@
+"""AirComp transceiver tests (paper Section IV, Eqs. 14-17 + Remark 4)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aircomp import (aircomp_aggregate, aircomp_simulate_channel,
+                                schedule_by_channel)
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=10,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("ci")
+
+
+def test_high_snr_recovers_mean():
+    deltas = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(5, 64)),
+                               dtype=jnp.float32)}
+    agg, stats = aircomp_aggregate(deltas, jax.random.key(0), snr_db=200.0,
+                                   h_min=0.8)
+    np.testing.assert_allclose(np.asarray(agg["w"]),
+                               np.asarray(jnp.mean(deltas["w"], 0)),
+                               atol=1e-5)
+
+
+def test_noise_variance_matches_eq17():
+    """Empirical variance of the recovered update error ≈ σ_w²Δmax/(M²dPh²)."""
+    rng = np.random.default_rng(1)
+    M, d = 4, 256
+    deltas = {"w": jnp.asarray(rng.normal(size=(M, d)), dtype=jnp.float32)}
+    sq = np.sum(np.asarray(deltas["w"]) ** 2, axis=1)
+    snr_db, h_min = 0.0, 0.8
+    expected_var = 1.0 * sq.max() / (M ** 2 * d * 1.0 * h_min ** 2)
+    errs = []
+    mean = np.mean(np.asarray(deltas["w"]), axis=0)
+    for s in range(200):
+        agg, _ = aircomp_aggregate(deltas, jax.random.key(s), snr_db=snr_db,
+                                   h_min=h_min)
+        errs.append(np.asarray(agg["w"]) - mean)
+    emp_var = np.var(np.stack(errs))
+    assert 0.7 * expected_var < emp_var < 1.4 * expected_var, \
+        (emp_var, expected_var)
+
+
+def test_explicit_channel_matches_closed_form_variance():
+    """The complex-channel simulation agrees with the Eq.17 closed form:
+    unbiased mean recovery and matching error variance (up to the complex→
+    real projection factor 1/2 ≤ c ≤ 1)."""
+    rng = np.random.default_rng(2)
+    M, d = 5, 512
+    deltas = jnp.asarray(rng.normal(size=(M, d)), dtype=jnp.float32)
+    mean = np.mean(np.asarray(deltas), axis=0)
+    errs = []
+    for s in range(100):
+        y, diag = aircomp_simulate_channel(deltas, jax.random.key(s),
+                                           snr_db=0.0, h_min=0.8)
+        errs.append(np.asarray(y) - mean)
+    bias = np.abs(np.mean(np.stack(errs)))
+    assert bias < 0.02, bias
+    sq = np.sum(np.asarray(deltas) ** 2, axis=1)
+    full_var = sq.max() / (M ** 2 * d * 0.8 ** 2)
+    emp = np.var(np.stack(errs))
+    assert 0.3 * full_var < emp < 1.2 * full_var  # real projection halves it
+
+
+def test_energy_constraint_for_scheduled_devices():
+    """‖α_i Δ_i‖² ≤ dP whenever |h_i| ≥ h_min (the scheduling criterion)."""
+    rng = np.random.default_rng(3)
+    deltas = jnp.asarray(rng.normal(size=(8, 128)), dtype=jnp.float32)
+    y, diag = aircomp_simulate_channel(deltas, jax.random.key(7), snr_db=0.0,
+                                       h_min=0.8)
+    scheduled = np.abs(np.asarray(diag["h"])) >= 0.8
+    if scheduled.any():
+        assert np.all(np.asarray(diag["tx_energy"])[scheduled]
+                      <= diag["energy_budget"] * (1 + 1e-5))
+
+
+@hypothesis.given(st.floats(0.2, 1.5))
+def test_schedule_rate_matches_rayleigh(h_min):
+    """P(|h| ≥ h_min) = exp(-h_min²) for CN(0,1) channels."""
+    h, mask = schedule_by_channel(jax.random.key(0), 20000, h_min)
+    rate = float(jnp.mean(mask.astype(jnp.float32)))
+    assert abs(rate - np.exp(-h_min ** 2)) < 0.02
+
+
+def test_noise_shrinks_as_updates_shrink():
+    """Remark 4: the transceiver scales noise with Δmax, so late-training
+    (small updates) sees proportionally small absolute noise."""
+    big = {"w": 10.0 * jnp.ones((4, 64))}
+    small = {"w": 0.1 * jnp.ones((4, 64))}
+    _, s_big = aircomp_aggregate(big, jax.random.key(0), snr_db=0.0, h_min=0.8)
+    _, s_small = aircomp_aggregate(small, jax.random.key(0), snr_db=0.0,
+                                   h_min=0.8)
+    ratio = float(s_big["aircomp_noise_std"] / s_small["aircomp_noise_std"])
+    assert abs(ratio - 100.0) < 1.0  # ‖Δ‖ ratio is 100×

@@ -1,0 +1,69 @@
+"""Dry-run machinery unit tests (subprocess: importing launch.dryrun sets
+XLA_FLAGS for 512 host devices, which must not leak into this process)."""
+import pytest
+
+from tests.conftest import run_subprocess
+
+
+def test_parse_collectives_trip_weighting():
+    run_subprocess("""
+from repro.launch.dryrun import parse_collectives, _shape_bytes
+hlo = '''
+HloModule m
+
+%scan_body (p: f32[8]) -> f32[8] {
+  %x = f32[8]{0} parameter(0)
+  %ar = f32[8]{0} all-reduce(%x), replica_groups={}
+  ROOT %r = f32[8]{0} add(%ar, %ar)
+}
+
+%cond (p: f32[8]) -> pred[] {
+  %p = f32[8]{0} parameter(0)
+  ROOT %c = pred[] constant(true)
+}
+
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %a = f32[8]{0} parameter(0)
+  %ag = f32[16]{0} all-gather(%a), dimensions={0}
+  %w = f32[8]{0} while(%a), condition=%cond, body=%scan_body, backend_config={"known_trip_count":{"n":"24"}}
+  ROOT %out = f32[8]{0} add(%w, %a)
+}
+'''
+b, n = parse_collectives(hlo)
+assert b["all-gather"] == 16 * 4, b
+assert b["all-reduce"] == 24 * 8 * 4, b   # trip-weighted
+assert n["all-reduce"] == 24, n
+assert _shape_bytes("bf16[4,8]") == 64
+assert _shape_bytes("(f32[2], s32[3])") == 8 + 12
+print("parse OK")
+""", n_devices=1)
+
+
+def test_dryrun_end_to_end_smoke():
+    """Tiny-mesh dry-run of the real pipeline: lower+compile qwen2-0.5b
+    train on 8 fake devices by monkeypatching the production mesh."""
+    run_subprocess("""
+import repro.launch.dryrun as dr
+import jax
+from jax.sharding import AxisType
+dr.make_production_mesh = lambda multi_pod=False: jax.make_mesh(
+    (2, 2, 2) if multi_pod else (4, 2),
+    ("pod", "data", "model") if multi_pod else ("data", "model"),
+    axis_types=(AxisType.Auto,) * (3 if multi_pod else 2))
+import repro.launch.dryrun as d2
+rec = dr.run_case("qwen2-0.5b", "train_4k", multi_pod=False)
+assert rec["hlo_flops_per_device"] > 0
+assert rec["collective_total_bytes"] > 0
+assert rec["memory"]["total_bytes_per_device"] > 0
+rec2 = dr.run_case("qwen2-0.5b", "train_4k", multi_pod=True)
+assert "delta_agg_program" in rec2
+print("dryrun smoke OK")
+""", n_devices=8, timeout=900)
+
+
+def test_hw_roofline_formula():
+    from repro.utils import hw
+    r = hw.roofline_seconds(197e12, 819e9, 50e9, chips=1)
+    assert abs(r["compute_s"] - 1.0) < 1e-9
+    assert abs(r["memory_s"] - 1.0) < 1e-9
+    assert abs(r["collective_s"] - 1.0) < 1e-9

@@ -1,0 +1,199 @@
+"""Properties of the zeroth-order gradient estimator (paper Eq. 2-4).
+
+Key invariants, checked with hypothesis-driven problem instances:
+  1. Unbiasedness up to smoothing: E[∇̃F] = ∇f^μ ≈ ∇f with bias O(μ) on
+     smooth quadratics (Eq. 4 / [10, Lemma 2]).
+  2. Variance shrinks like 1/b2 (the mini-batch estimator's reason to exist).
+  3. Seed replay is exact: the update applied by apply_coefficients equals
+     the materialized estimate — bit-equal trees.
+  4. Direction law: sphere directions have unit global norm; gaussian
+     directions have E‖v‖² = d.
+"""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import estimator
+from repro.utils.tree import (sphere_like_tree, tree_axpy, tree_norm,
+                              tree_size, tree_sub, tree_zeros_like)
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=10,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("ci")
+
+
+def quad_problem(seed, d=24):
+    """f(x) = 0.5 x^T A x + b^T x with known gradient, as a 2-leaf pytree."""
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(d, d)).astype(np.float32)
+    a = q @ q.T / d + np.eye(d, dtype=np.float32)
+    b = rng.normal(size=(d,)).astype(np.float32)
+
+    def loss(params, batch):
+        x = jnp.concatenate([params["p1"], params["p2"]])
+        return 0.5 * x @ jnp.asarray(a) @ x + jnp.asarray(b) @ x
+
+    x0 = rng.normal(size=d).astype(np.float32)
+    params = {"p1": jnp.asarray(x0[: d // 2]), "p2": jnp.asarray(x0[d // 2:])}
+    grad = a @ x0 + b
+    return loss, params, grad
+
+
+@hypothesis.given(st.integers(0, 1000))
+def test_sphere_direction_unit_norm(seed):
+    params = {"a": jnp.zeros((13,)), "b": jnp.zeros((7, 3))}
+    v = sphere_like_tree(jax.random.key(seed), params)
+    assert abs(float(tree_norm(v)) - 1.0) < 1e-5
+
+
+def test_gaussian_direction_norm():
+    params = {"a": jnp.zeros((500,))}
+    norms = [float(tree_norm(estimator.sample_direction(
+        jax.random.key(s), params, "gaussian")) ** 2) for s in range(64)]
+    assert abs(np.mean(norms) / 500 - 1.0) < 0.15
+
+
+@hypothesis.given(st.integers(0, 50))
+def test_estimator_unbiased_on_quadratic(seed):
+    """Mean over many directions approaches the true gradient (bias O(μ))."""
+    loss, params, grad = quad_problem(seed)
+    est = estimator.estimate(loss, params, None, jax.random.key(seed),
+                             mu=1e-4, b2=4096, kind="sphere")
+    est_flat = np.concatenate([np.asarray(l).ravel()
+                               for l in jax.tree.leaves(est)])
+    cos = est_flat @ grad / (np.linalg.norm(est_flat) * np.linalg.norm(grad))
+    rel = np.linalg.norm(est_flat - grad) / np.linalg.norm(grad)
+    assert cos > 0.95, cos
+    assert rel < 0.4, rel
+
+
+def test_bias_scales_with_mu():
+    """On a cubic-perturbed objective the smoothing bias grows with μ."""
+    d = 16
+    rng = np.random.default_rng(0)
+    b = rng.normal(size=d).astype(np.float32)
+
+    def loss(params, batch):
+        x = params["x"]
+        return jnp.sum(x ** 3) / 3 + jnp.asarray(b) @ x
+
+    params = {"x": jnp.asarray(rng.normal(size=d).astype(np.float32))}
+    grad = 3 * np.asarray(params["x"]) ** 2 / 3 + b
+
+    errs = []
+    for mu in (1e-3, 3e-1):
+        est = estimator.estimate(loss, params, None, jax.random.key(1),
+                                 mu=mu, b2=8192, kind="sphere")
+        e = np.concatenate([np.asarray(l).ravel()
+                            for l in jax.tree.leaves(est)])
+        errs.append(np.linalg.norm(e - grad))
+    assert errs[1] > errs[0]
+
+
+def test_variance_shrinks_with_b2():
+    loss, params, grad = quad_problem(3)
+
+    def est_err(b2, seed):
+        e = estimator.estimate(loss, params, None, jax.random.key(seed),
+                               mu=1e-4, b2=b2)
+        ef = np.concatenate([np.asarray(l).ravel()
+                             for l in jax.tree.leaves(e)])
+        return np.sum((ef - grad) ** 2)
+
+    small = np.mean([est_err(8, s) for s in range(8)])
+    large = np.mean([est_err(256, s) for s in range(8)])
+    assert large < small / 4, (small, large)
+
+
+@hypothesis.given(st.integers(0, 20), st.integers(1, 6))
+def test_seed_replay_exact(seed, b2):
+    """apply_coefficients(zeros) reconstructs the materialized estimate."""
+    loss, params, _ = quad_problem(seed)
+    rng = jax.random.key(seed)
+    coeffs, _ = estimator.coefficients(loss, params, None, rng, mu=1e-3,
+                                       b2=b2)
+    est = estimator.apply_coefficients(tree_zeros_like(params), rng, coeffs)
+    est2 = estimator.estimate(loss, params, None, rng, mu=1e-3, b2=b2)
+    for a, c in zip(jax.tree.leaves(est), jax.tree.leaves(est2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_coordinate_estimator_is_basis_aligned():
+    loss, params, grad = quad_problem(7)
+    v = estimator.sample_direction(jax.random.key(0), params, "coordinate")
+    flat = np.concatenate([np.asarray(l).ravel()
+                           for l in jax.tree.leaves(v)])
+    assert np.sum(flat != 0) == 1 and np.isclose(np.abs(flat).sum(), 1.0)
+
+
+def test_gaussian_estimator_unbiased():
+    loss, params, grad = quad_problem(11)
+    est = estimator.estimate(loss, params, None, jax.random.key(2),
+                             mu=1e-4, b2=8192, kind="gaussian")
+    e = np.concatenate([np.asarray(l).ravel()
+                        for l in jax.tree.leaves(est)])
+    cos = e @ grad / (np.linalg.norm(e) * np.linalg.norm(grad))
+    assert cos > 0.95
+
+
+def test_rademacher_estimator_unbiased():
+    loss, params, grad = quad_problem(13)
+    est = estimator.estimate(loss, params, None, jax.random.key(3),
+                             mu=1e-4, b2=4096, kind="rademacher")
+    e = np.concatenate([np.asarray(l).ravel()
+                        for l in jax.tree.leaves(est)])
+    cos = e @ grad / (np.linalg.norm(e) * np.linalg.norm(grad))
+    assert cos > 0.95
+
+
+def test_central_difference_reduces_variance():
+    """Both one-sided and central differences estimate the same smoothed
+    gradient ∇f^μ; the central form cancels the even-order terms pathwise,
+    so at large μ on a curved objective its per-sample estimates have
+    smaller spread (classic ZO variance reduction at +1 query/direction)."""
+    loss, params, grad = quad_problem(17)
+    mu = 0.5
+
+    def spread(central):
+        es = []
+        for s in range(8):
+            coeffs, _ = estimator.coefficients(
+                loss, params, None, jax.random.key(s), mu=mu, b2=64,
+                central=central)
+            e = estimator.apply_coefficients(
+                tree_zeros_like(params), jax.random.key(s), coeffs)
+            es.append(np.concatenate([np.asarray(l).ravel()
+                                      for l in jax.tree.leaves(e)]))
+        es = np.stack(es)
+        return np.mean(np.var(es, axis=0))
+
+    assert spread(True) < spread(False), (spread(True), spread(False))
+
+
+def test_server_momentum_accelerates_quadratic():
+    from repro.configs.base import FedZOConfig
+    from repro.core import fedzo
+    from repro.utils.tree import tree_zeros_like
+
+    def qloss(params, batch):
+        return 0.5 * jnp.sum((params["x"] - 1.0) ** 2)
+
+    batches = {"target": jnp.ones((4, 2, 1))}  # [M, H, dummy]
+    rngs = jax.random.split(jax.random.key(0), 4)
+
+    def run(mom):
+        cfg = FedZOConfig(local_iters=2, lr=0.02, mu=1e-3, b2=8,
+                          server_momentum=mom)
+        p = {"x": jnp.zeros((16,))}
+        m = tree_zeros_like(p)
+        for t in range(10):
+            p, _, m = fedzo.round_simulated(
+                qloss, p, batches, jax.random.split(jax.random.key(t), 4),
+                cfg, momentum=m)
+        return float(qloss(p, None))
+
+    assert run(0.6) < run(0.0)

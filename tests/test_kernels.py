@@ -1,0 +1,109 @@
+"""Pallas kernel validation: shape/dtype sweeps, interpret=True vs the
+pure-jnp oracles in kernels/ref.py (deliverable c)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.zo_axpy import BLOCK
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=8,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("ci")
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("n", [BLOCK, 2 * BLOCK, BLOCK + 12345, 1000])
+def test_zo_axpy2_sweep(n, dtype):
+    x = jax.random.normal(jax.random.key(0), (n,), dtype)
+    u = jax.random.normal(jax.random.key(1), (n,), jnp.float32)
+    v = jax.random.normal(jax.random.key(2), (n,), jnp.float32)
+    out = ops.axpy2(x, u, v, 0.25, -1.5)
+    r = ref.axpy2_ref(x, u, v, jnp.asarray([0.25, -1.5]))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(r, np.float32),
+                               atol=2e-2 if dtype == jnp.bfloat16 else 1e-6)
+
+
+@hypothesis.given(st.integers(1, 3 * BLOCK), st.floats(-2, 2), st.floats(-2, 2))
+def test_zo_axpy2_property(n, a, b):
+    x = jnp.arange(n, dtype=jnp.float32) / n
+    u = jnp.ones((n,), jnp.float32)
+    v = -0.5 * jnp.ones((n,), jnp.float32)
+    out = ops.axpy2(x, u, v, a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x) + a - 0.5 * b,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("shape", [(2, 128, 256, 4, 2, 64),
+                                   (1, 128, 128, 8, 8, 32),
+                                   (1, 300, 300, 4, 1, 128),
+                                   (2, 64, 512, 2, 2, 64)])
+def test_flash_attention_sweep(shape, dtype):
+    B, Sq, Sk, Hq, Hkv, D = shape
+    q = jax.random.normal(jax.random.key(0), (B, Sq, Hq, D), dtype)
+    k = jax.random.normal(jax.random.key(1), (B, Sk, Hkv, D), dtype)
+    v = jax.random.normal(jax.random.key(2), (B, Sk, Hkv, D), dtype)
+    out = ops.attention(q, k, v, causal=True, block_q=128, block_k=128)
+    r = ref.attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3),
+                          causal=True).transpose(0, 2, 1, 3)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(r, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("window", [16, 64, 1000])
+def test_flash_attention_window(window):
+    B, S, H, D = 1, 256, 2, 32
+    q = jax.random.normal(jax.random.key(0), (B, S, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.key(1), (B, S, H, D), jnp.float32)
+    v = jax.random.normal(jax.random.key(2), (B, S, H, D), jnp.float32)
+    out = ops.attention(q, k, v, causal=True, window=window, block_q=128,
+                        block_k=128)
+    r = ref.attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3), causal=True,
+                          window=window).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r), atol=2e-5)
+
+
+def test_flash_matches_model_chunked_attention():
+    """The model's pure-jnp chunked attention and the Pallas kernel agree —
+    they are twins of the same math (DESIGN.md kernels section)."""
+    from repro.models.layers import chunked_attention
+    B, S, Hq, Hkv, D = 2, 192, 4, 2, 64
+    q = jax.random.normal(jax.random.key(0), (B, S, Hq, D), jnp.float32)
+    k = jax.random.normal(jax.random.key(1), (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(jax.random.key(2), (B, S, Hkv, D), jnp.float32)
+    a = ops.attention(q, k, v, causal=True, block_q=64, block_k=64)
+    b = chunked_attention(q, k, v, causal=True, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("shape", [(4, 64), (130, 896), (1, 2048), (999, 64)])
+def test_rmsnorm_sweep(shape, dtype):
+    x = jax.random.normal(jax.random.key(0), shape, dtype)
+    s = jax.random.normal(jax.random.key(1), (shape[-1],), jnp.float32)
+    out = ops.rmsnorm(x, s)
+    r = ref.rmsnorm_ref(x, s)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-6
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(r, np.float32), atol=tol)
+
+
+def test_rmsnorm_matches_model_norm():
+    from repro.models.layers import init_norm, norm_fwd
+    x = jax.random.normal(jax.random.key(0), (5, 7, 64), jnp.float32)
+    p = init_norm(64)
+    out_model = norm_fwd(p, x)
+    out_kernel = ops.rmsnorm(x, p["scale"])
+    np.testing.assert_allclose(np.asarray(out_model), np.asarray(out_kernel),
+                               atol=1e-5)

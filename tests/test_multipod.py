@@ -1,0 +1,63 @@
+"""Multi-pod round semantics on a small fake mesh (subprocess): the
+shared-direction pod round equals the equivalent single-device computation,
+and the dense-delta aggregation program averages exactly."""
+import pytest
+
+from tests.conftest import run_subprocess
+
+
+@pytest.mark.slow
+def test_pod_round_matches_single_device_math():
+    run_subprocess("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from repro.configs import get_config
+from repro.configs.base import FedZOConfig, ShapeConfig
+from repro.core import fedzo
+from repro.core.estimator import coefficients, apply_coefficients
+from repro.models.api import build, make_batch
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"), axis_types=(AxisType.Auto,)*3)
+cfg = get_config("qwen2-0.5b").reduced()
+m = build(cfg)
+params = m.init(jax.random.key(0))
+batch = make_batch(m, ShapeConfig("t", 16, 8, "train"), jax.random.key(1))
+fcfg = FedZOConfig(b2=2, lr=1e-3, mu=1e-2)
+
+loss_g = lambda p, b: m.loss(p, b, mesh=mesh, n_groups=2)
+step = jax.jit(fedzo.make_pod_round_step(loss_g, fcfg, mesh))
+newp, metrics = step(params, batch, jax.random.key(5))
+
+# single-device reference: same shared directions, coefficients from
+# per-group losses averaged
+loss_ref = lambda p, b: m.loss(p, b, n_groups=2)
+base = loss_ref(params, batch)
+np.testing.assert_allclose(np.asarray(metrics["per_pod_loss"]), np.asarray(base), rtol=2e-4)
+from repro.utils.tree import tree_axpy, tree_size
+from repro.core.estimator import sample_direction, _scale_factor
+d = tree_size(params); scale = _scale_factor(d, "sphere")
+cs = []
+for n in range(2):
+    v = sample_direction(jax.random.fold_in(jax.random.key(5), n), params, "sphere")
+    lp = loss_ref(tree_axpy(fcfg.mu, v, params), batch)
+    cs.append(scale * np.mean(np.asarray(lp - base)) / fcfg.mu)
+ref_p = apply_coefficients(params, jax.random.key(5), jnp.asarray(cs), scale=-fcfg.lr)
+for a, b in zip(jax.tree.leaves(newp), jax.tree.leaves(ref_p)):
+    np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32), atol=3e-4)
+print("pod round OK")
+""", n_devices=8)
+
+
+@pytest.mark.slow
+def test_delta_agg_program_averages():
+    run_subprocess("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import FedZOConfig
+from repro.core import fedzo
+deltas = {"w": jnp.stack([jnp.full((64,), 1.0), jnp.full((64,), 3.0)])}
+agg = jax.jit(fedzo.make_delta_agg_step(FedZOConfig(aircomp=False), 2))(deltas, jax.random.key(0))
+np.testing.assert_allclose(np.asarray(agg["w"]), 2.0)
+noisy = jax.jit(fedzo.make_delta_agg_step(FedZOConfig(aircomp=True, snr_db=30.0), 2))(deltas, jax.random.key(0))
+assert abs(float(noisy["w"].mean()) - 2.0) < 0.2
+print("agg OK")
+""", n_devices=8)
