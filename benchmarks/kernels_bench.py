@@ -19,6 +19,18 @@ def run():
     _, us = timed(lambda: ops.axpy2(x, u, v, 0.1, -0.2), n=3)
     rows.append((f"kernels/zo_axpy2_n{n}", us, n * 4 * 4 / max(us, 1e-9)))  # B/µs
 
+    # flat hot-path kernels: same math, directions regenerated in-kernel —
+    # HBM bytes drop from 4 streams (axpy2) to 2 (walk/replay read+write x)
+    key2 = jax.random.key_data(jax.random.key(0))
+    _, us = timed(lambda: ops.zo_walk(x, key2, [0, 1], [-0.1, 0.1]), n=3)
+    rows.append((f"kernels/zo_walk_n{n}", us, n * 2 * 4 / max(us, 1e-9)))
+    coeffs = jnp.linspace(-1.0, 1.0, 20)
+    _, us = timed(lambda: ops.zo_replay(x, key2, coeffs), n=3)
+    rows.append((f"kernels/zo_replay_n{n}_b2_20", us,
+                 n * 2 * 4 / max(us, 1e-9)))
+    _, us = timed(lambda: ops.zo_dirnorms(key2, n - 7, b2=20, n_pad=n), n=3)
+    rows.append((f"kernels/zo_dirnorms_n{n}_b2_20", us, 20 * 4 / max(us, 1e-9)))
+
     q = jax.random.normal(jax.random.key(0), (1, 512, 4, 64), jnp.float32)
     k = jax.random.normal(jax.random.key(1), (1, 512, 2, 64), jnp.float32)
     vv = jax.random.normal(jax.random.key(2), (1, 512, 2, 64), jnp.float32)

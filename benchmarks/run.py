@@ -16,8 +16,9 @@ def main() -> None:
     ap.add_argument("--only", default="")
     args = ap.parse_args()
 
-    from benchmarks import kernels_bench, roofline_report
+    from benchmarks import kernels_bench, roofline_report, zo_path_bench
     suites = [("kernels", kernels_bench.run),
+              ("zo_path", zo_path_bench.run),
               ("roofline", roofline_report.run)]
     if not args.quick:
         from benchmarks import paper_figures as pf

@@ -1,0 +1,14 @@
+"""FedZO reproduction package.
+
+Seed replay must be *sharding-invariant*: a direction generated inside a
+GSPMD-partitioned program (e.g. the multi-pod round) must be bit-equal to
+the one a receiver regenerates elsewhere from the same key. Legacy
+non-partitionable threefry does not guarantee that — the partitioner can
+produce different bits when RNG is fused into a sharded program (observed
+as a wrong-direction update in the pod round on jax 0.4.x, where the flag
+still defaults to False). Opt in to partitionable threefry before any key
+is used; newer jax defaults to this behavior.
+"""
+import jax as _jax
+
+_jax.config.update("jax_threefry_partitionable", True)

@@ -141,6 +141,15 @@ class FedZOConfig:
     estimator: str = "sphere"  # sphere (paper) | gaussian | rademacher | coordinate
     central: bool = False      # two-sided difference (O(mu^2) bias, +1 query)
     direction_dtype: str = "float32"  # bfloat16 halves perturbation HBM traffic
+    # flat-buffer hot path (DESIGN.md §7): fuse perturb/update into Pallas
+    # streaming kernels over one padded 1-D parameter buffer, directions
+    # regenerated in-kernel from the counter convention
+    flat_params: bool = False
+    # direction convention for the *pytree* path: "tree" (per-leaf threefry,
+    # the original) or "counter" (the flat path's convention — used to prove
+    # old-vs-new trajectory equivalence). The flat path is always "counter".
+    direction_conv: str = "tree"
+    flat_block_rows: int = 0   # kernel grid rows per block; 0 = default (512)
     server_momentum: float = 0.0  # FedOpt-style momentum on aggregated deltas
     seed: int = 0
     # AirComp (Section IV); snr_db=None disables the channel simulation

@@ -15,6 +15,12 @@ Two deployment modes share this module:
 The local phase never materializes a gradient pytree: per direction it pays
 one loss forward + one axpy, and the update is replayed from seeds
 (DESIGN.md §3). ``jax.grad`` is never called.
+
+With ``cfg.flat_params=True`` the local phase runs on the flat-buffer hot
+path (DESIGN.md §7): the pytree is flattened ONCE per phase into a padded
+1-D buffer, every perturb is a fused zo_walk transition (one HBM pass per
+direction, directions regenerated in-kernel), and the b2-direction update
+is a single zo_replay pass. The pytree path stays as the reference.
 """
 from __future__ import annotations
 
@@ -26,6 +32,7 @@ import jax.numpy as jnp
 from repro.configs.base import FedZOConfig
 from repro.core import estimator
 from repro.core.aircomp import aircomp_aggregate
+from repro.utils.flatparams import flat_geometry, flatten, unflatten
 from repro.utils.tree import tree_add, tree_scale, tree_sub
 
 
@@ -35,20 +42,52 @@ class LocalResult(NamedTuple):
     losses: jnp.ndarray   # [H] base losses along the trajectory
 
 
+def _flat_setup(params, cfg: FedZOConfig):
+    """(spec, block_rows kwarg) for the cfg's flat-buffer geometry."""
+    return flat_geometry(params, cfg.flat_block_rows)
+
+
+def flat_local_iterate(loss_fn, buf, spec, batch, rng, cfg: FedZOConfig,
+                       block_rows=None):
+    """One ZO update on the flat buffer: fused walk + single-pass replay.
+
+    The sphere inv-norms are computed once and shared by both ends — the
+    zo_dirnorms kernel regenerates all b2 directions, so running it twice
+    would double the direction-generation compute of the iterate.
+    """
+    key2 = estimator._key_data(rng)
+    inv = estimator.flat_inv_norms(key2, spec, cfg.b2, cfg.estimator,
+                                   block_rows=block_rows)
+    coeffs, base = estimator.flat_coefficients(
+        loss_fn, buf, spec, batch, rng, mu=cfg.mu, b2=cfg.b2,
+        kind=cfg.estimator, central=cfg.central, block_rows=block_rows,
+        inv=inv)
+    buf = estimator.flat_apply_coefficients(
+        buf, spec, rng, coeffs, scale=-cfg.lr, kind=cfg.estimator,
+        block_rows=block_rows, inv=inv)
+    return buf, coeffs, base
+
+
 def local_iterate(loss_fn, params, batch, rng, cfg: FedZOConfig):
     """One stochastic zeroth-order update (Eq. 5-6): x ← x − η ∇̃F(x).
 
     Returns (new_params, coeffs [b2], base_loss). This is the unit the
-    multi-pod dry-run lowers as ``train_step``.
+    multi-pod dry-run lowers as ``train_step``. Dispatches to the flat
+    hot path when cfg.flat_params is set.
     """
-    import jax.numpy as _jnp
-    ddt = _jnp.dtype(cfg.direction_dtype)
+    if cfg.flat_params:
+        spec, br = _flat_setup(params, cfg)
+        buf = flatten(params, spec)
+        buf, coeffs, base = flat_local_iterate(loss_fn, buf, spec, batch,
+                                               rng, cfg, block_rows=br)
+        return unflatten(buf, spec), coeffs, base
+    ddt = jnp.dtype(cfg.direction_dtype)
     coeffs, base = estimator.coefficients(
         loss_fn, params, batch, rng, mu=cfg.mu, b2=cfg.b2, kind=cfg.estimator,
-        direction_dtype=ddt, central=cfg.central)
+        direction_dtype=ddt, central=cfg.central, conv=cfg.direction_conv)
     new_params = estimator.apply_coefficients(
         params, rng, coeffs, scale=-cfg.lr, kind=cfg.estimator,
-        direction_dtype=ddt)
+        direction_dtype=ddt, conv=cfg.direction_conv)
     return new_params, coeffs, base
 
 
@@ -56,15 +95,31 @@ def local_phase(loss_fn, params, batches, rng, cfg: FedZOConfig) -> LocalResult:
     """H local iterates (Algorithm 1 inner loop).
 
     ``batches`` is a pytree whose leaves have a leading [H] axis (the client
-    pre-samples H minibatches of size b1).
+    pre-samples H minibatches of size b1). On the flat path the pytree is
+    flattened once for the whole phase — the H·b2 perturb/update passes all
+    run on the single flat buffer.
     """
+    keys = jax.random.split(rng, cfg.local_iters)
+
+    if cfg.flat_params:
+        spec, br = _flat_setup(params, cfg)
+
+        def fbody(carry, inp):
+            k, batch = inp
+            b, coeffs, base = flat_local_iterate(loss_fn, carry, spec, batch,
+                                                 k, cfg, block_rows=br)
+            return b, (coeffs, base)
+
+        buf, (coeffs, losses) = jax.lax.scan(
+            fbody, flatten(params, spec), (keys, batches))
+        return LocalResult(unflatten(buf, spec), coeffs, losses)
+
     def body(carry, inp):
         p = carry
         k, batch = inp
         p, coeffs, base = local_iterate(loss_fn, p, batch, k, cfg)
         return p, (coeffs, base)
 
-    keys = jax.random.split(rng, cfg.local_iters)
     p_fin, (coeffs, losses) = jax.lax.scan(body, params, (keys, batches))
     return LocalResult(p_fin, coeffs, losses)
 
@@ -133,11 +188,31 @@ def make_pod_round_step(loss_fn_grouped, cfg: FedZOConfig, mesh) -> Callable:
     ``loss_fn_grouped(params, batch) -> [n_pod] per-pod losses``.
     signature: (params, batch, rng) -> (params, metrics)
     """
-    from repro.core.estimator import (_scale_factor, sample_direction,
-                                      stream_perturb)
+    from repro.core.estimator import _scale_factor
     from repro.utils.tree import tree_axpy, tree_size
 
     n_pod = mesh.shape["pod"]
+
+    if cfg.flat_params:
+        def flat_step(params, batch, rng):
+            spec, br = _flat_setup(params, cfg)
+            buf = flatten(params, spec)
+            # flat_coefficients handles vector-valued (grouped) losses:
+            # coeffs come back [b2, n_pod]
+            coeffs, base = estimator.flat_coefficients(
+                loss_fn_grouped, buf, spec, batch, rng,
+                mu=cfg.mu, b2=cfg.b2, kind=cfg.estimator,
+                central=cfg.central, block_rows=br)
+            # the only cross-pod uplink: mean of per-pod coefficients
+            c_mean = jnp.mean(coeffs, axis=1)               # [b2]
+            buf = estimator.flat_apply_coefficients(
+                buf, spec, rng, c_mean, scale=-cfg.lr, kind=cfg.estimator,
+                block_rows=br)
+            return unflatten(buf, spec), {
+                "loss": jnp.mean(base), "per_pod_loss": base,
+                "coeff_pod_spread": jnp.std(coeffs, axis=1).mean()}
+
+        return flat_step
 
     def step(params, batch, rng):
         d = tree_size(params)
@@ -145,8 +220,9 @@ def make_pod_round_step(loss_fn_grouped, cfg: FedZOConfig, mesh) -> Callable:
         base = loss_fn_grouped(params, batch)              # [n_pod]
 
         def body(n, acc):
-            v = sample_direction(jax.random.fold_in(rng, n), params,
-                                 cfg.estimator, jnp.dtype(cfg.direction_dtype))
+            v = estimator._direction(rng, n, params, cfg.estimator,
+                                     jnp.dtype(cfg.direction_dtype),
+                                     cfg.direction_conv)
             lp = loss_fn_grouped(tree_axpy(cfg.mu, v, params), batch)
             c = scale * (lp - base).astype(jnp.float32) / cfg.mu  # [n_pod]
             return acc.at[n].set(c)
@@ -158,7 +234,8 @@ def make_pod_round_step(loss_fn_grouped, cfg: FedZOConfig, mesh) -> Callable:
         c_mean = jnp.mean(coeffs, axis=1)                  # [b2]
         new_params = estimator.apply_coefficients(
             params, rng, c_mean, scale=-cfg.lr, kind=cfg.estimator,
-            direction_dtype=jnp.dtype(cfg.direction_dtype))
+            direction_dtype=jnp.dtype(cfg.direction_dtype),
+            conv=cfg.direction_conv)
         return new_params, {"loss": jnp.mean(base),
                             "per_pod_loss": base,
                             "coeff_pod_spread": jnp.std(coeffs, axis=1).mean()}

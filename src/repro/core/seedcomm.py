@@ -16,6 +16,12 @@ parameter vector per client to reconstruct, so this trades uplink bandwidth
 for server HBM traffic. On a pod, reconstruction is itself sharded (each
 device replays only its parameter shard), so the cost is d/n_chips per
 device — see EXPERIMENTS.md §Perf.
+
+The flat-buffer hot path (cfg.flat_params, DESIGN.md §7) keeps the wire
+format IDENTICAL — still (key, coeffs [H, b2]) — but collapses the server's
+reconstruction cost from H·b2 axpy passes to H single-pass zo_replay calls:
+the b2 directions of each local iterate are regenerated in-kernel from the
+counter convention and accumulated in VMEM.
 """
 from __future__ import annotations
 
@@ -24,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import FedZOConfig
 from repro.core import estimator
+from repro.utils.flatparams import flat_geometry, unflatten
 from repro.utils.tree import tree_add, tree_scale, tree_zeros_like
 
 
@@ -38,15 +45,36 @@ def wire_bytes(msg) -> int:
 
 
 def reconstruct_delta(msg, params_like, cfg: FedZOConfig):
-    """Replay Δ = −η Σ_k Σ_n (c[k,n]/b2) v(key, k, n) on this host/shard."""
+    """Replay Δ = −η Σ_k Σ_n (c[k,n]/b2) v(key, k, n) on this host/shard.
+
+    Same wire message either way; cfg.flat_params selects how the receiver
+    replays it: b2 axpy passes per iterate (pytree) or one zo_replay pass
+    per iterate (flat, in-kernel direction regeneration).
+    """
     rng = jax.random.wrap_key_data(msg["key"])
     H = msg["coeffs"].shape[0]
     keys = jax.random.split(rng, H)
 
+    if cfg.flat_params:
+        # must match the sender's geometry exactly (bit-exact seed replay)
+        spec, br = flat_geometry(params_like, cfg.flat_block_rows)
+
+        def fbody(buf, k):
+            buf = estimator.flat_apply_coefficients(
+                buf, spec, keys[k], msg["coeffs"][k], scale=-msg["lr"],
+                kind=cfg.estimator, block_rows=br)
+            return buf, None
+
+        buf, _ = jax.lax.scan(fbody, jnp.zeros((spec.n_pad,), jnp.float32),
+                              jnp.arange(H))
+        return unflatten(buf, spec)
+
+    conv = cfg.direction_conv
+
     def body(k, delta):
         return estimator.apply_coefficients(
             delta, keys[k], msg["coeffs"][k], scale=-msg["lr"],
-            kind=cfg.estimator), None
+            kind=cfg.estimator, conv=conv), None
 
     delta, _ = jax.lax.scan(lambda d, k: body(k, d),
                             tree_zeros_like(params_like), jnp.arange(H))

@@ -50,6 +50,54 @@ def tree_axpy2(x_tree, u_tree, v_tree, a, b, *, interpret=None):
     return jax.tree.map(one, x_tree, u_tree, v_tree)
 
 
+def _as2d(x, block_rows):
+    """[N] → [R, 128] view (padding to a block multiple if needed)."""
+    per = block_rows * _za.LANES
+    xp, n = _pad_to(x, per)
+    return xp.reshape(-1, _za.LANES), n
+
+
+def zo_walk(x, key2, nn, ab, *, kind="normal", interpret=None,
+            block_rows=None):
+    """Fused perturbation transition on a flat [N] buffer.
+
+    out = x + ab[0]·v(nn[0]) + ab[1]·v(nn[1]) with directions regenerated
+    in-kernel from the counter convention (key2, n, index). One HBM pass.
+    """
+    block_rows = block_rows or _za.BLOCK_ROWS
+    x2, n = _as2d(x, block_rows)
+    nn = jnp.asarray(nn, jnp.int32).reshape(2)
+    ab = jnp.asarray(ab, jnp.float32).reshape(2)
+    out = _za.zo_walk(x2, key2, nn, ab, kind=kind,
+                      interpret=_auto_interpret(interpret),
+                      block_rows=block_rows)
+    return out.reshape(-1)[:n]
+
+
+def zo_replay(x, key2, coeffs, *, kind="normal", interpret=None,
+              block_rows=None):
+    """Single-pass Σ_n coeffs[n]·v_n update on a flat [N] buffer."""
+    block_rows = block_rows or _za.BLOCK_ROWS
+    x2, n = _as2d(x, block_rows)
+    out = _za.zo_replay(x2, key2, jnp.asarray(coeffs, jnp.float32),
+                        kind=kind, interpret=_auto_interpret(interpret),
+                        block_rows=block_rows)
+    return out.reshape(-1)[:n]
+
+
+def zo_dirnorms(key2, d, *, b2, n_pad=None, kind="normal", interpret=None,
+                block_rows=None):
+    """[b2] squared direction norms ‖g_n[:d]‖² (counter convention)."""
+    block_rows = block_rows or _za.BLOCK_ROWS
+    per = block_rows * _za.LANES
+    if n_pad is None:
+        n_pad = d + ((-d) % per)
+    assert n_pad % per == 0, (n_pad, per)
+    return _za.zo_dirnorms(key2, d, b2=b2, n_pad=n_pad, kind=kind,
+                           interpret=_auto_interpret(interpret),
+                           block_rows=block_rows)
+
+
 def attention(q, k, v, *, causal=True, window=0, scale=None,
               block_q=128, block_k=128, interpret=None):
     """Flash attention on [B, S, H, D] layout (matches models/layers.py).

@@ -39,6 +39,51 @@ def attention_ref(q, k, v, *, causal=True, window=0, scale=None):
     return out.astype(q.dtype)
 
 
+def zo_walk_ref(x2, key2, nn, ab, *, kind="normal"):
+    """Oracle for zo_walk: elementwise, so whole-array = per-block bitwise."""
+    from repro.kernels.zo_axpy import counter_gen
+    r, lanes = x2.shape
+    idx = jnp.arange(r * lanes, dtype=jnp.uint32).reshape(r, lanes)
+    gp = counter_gen(kind, key2[0], key2[1], nn[0].astype(jnp.uint32), idx)
+    gn = counter_gen(kind, key2[0], key2[1], nn[1].astype(jnp.uint32), idx)
+    out = x2.astype(jnp.float32) + ab[0] * gp + ab[1] * gn
+    return out.astype(x2.dtype)
+
+
+def zo_replay_ref(x2, key2, coeffs, *, kind="normal"):
+    """Oracle for zo_replay: same n-ascending fp32 accumulation order (and
+    the same fori_loop structure, so jit compiles the same fp32 adds)."""
+    from repro.kernels.zo_axpy import counter_gen
+    r, lanes = x2.shape
+    idx = jnp.arange(r * lanes, dtype=jnp.uint32).reshape(r, lanes)
+
+    def body(n, acc):
+        g = counter_gen(kind, key2[0], key2[1], n.astype(jnp.uint32), idx)
+        return acc + coeffs[n] * g
+
+    acc = jax.lax.fori_loop(0, coeffs.shape[0], body,
+                            jnp.zeros((r, lanes), jnp.float32))
+    return (x2.astype(jnp.float32) + acc).astype(x2.dtype)
+
+
+def zo_dirnorms_ref(key2, d, b2, n_pad, *, kind="normal", block_rows=None):
+    """Oracle for zo_dirnorms: same per-block partial-sum order."""
+    from repro.kernels.zo_axpy import BLOCK_ROWS, LANES, counter_gen
+    block_rows = block_rows or BLOCK_ROWS
+    per = block_rows * LANES
+    out = []
+    for n in range(b2):
+        total = jnp.float32(0.0)
+        for i in range(n_pad // per):
+            idx = (jnp.uint32(i * per)
+                   + jnp.arange(per, dtype=jnp.uint32))
+            g = counter_gen(kind, key2[0], key2[1], jnp.uint32(n), idx)
+            g = jnp.where(idx < jnp.uint32(d), g, 0.0)
+            total = total + jnp.sum(g * g)
+        out.append(total)
+    return jnp.stack(out)
+
+
 def rmsnorm_ref(x, scale, *, eps=1e-6):
     xf = x.astype(jnp.float32)
     ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)

@@ -1,0 +1,63 @@
+"""Hypothesis import shim: use the real library when installed, otherwise a
+minimal deterministic fallback so the tier-1 suite still collects and runs.
+
+The fallback implements just what these tests use:
+  - ``st.integers(lo, hi)`` / ``st.floats(lo, hi)`` → a few fixed examples
+    (bounds + midpoint)
+  - ``@hypothesis.given(...)`` → run the test once per example combination
+    (capped, deterministic)
+  - ``hypothesis.settings`` / ``hypothesis.HealthCheck`` → no-ops
+
+Property coverage is obviously weaker than real hypothesis — install
+requirements-dev.txt for the real thing; CI does.
+"""
+from __future__ import annotations
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:  # deterministic fallback
+    import itertools
+    import types
+
+    _MAX_COMBOS = 8
+
+    class _Examples:
+        def __init__(self, examples):
+            self.examples = list(examples)
+
+    def _integers(min_value, max_value):
+        mid = (min_value + max_value) // 2
+        return _Examples(dict.fromkeys([min_value, mid, max_value]))
+
+    def _floats(min_value, max_value):
+        mid = 0.5 * (min_value + max_value)
+        return _Examples(dict.fromkeys([min_value, mid, max_value]))
+
+    def _given(*strategies):
+        def deco(fn):
+            def wrapper():
+                combos = itertools.islice(
+                    itertools.product(*[s.examples for s in strategies]),
+                    _MAX_COMBOS)
+                for combo in combos:
+                    fn(*combo)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    class _Settings:
+        @staticmethod
+        def register_profile(name, **kw):
+            pass
+
+        @staticmethod
+        def load_profile(name):
+            pass
+
+    hypothesis = types.SimpleNamespace(
+        given=_given, settings=_Settings, HealthCheck=())
+    st = types.SimpleNamespace(integers=_integers, floats=_floats)
+
+__all__ = ["hypothesis", "st"]

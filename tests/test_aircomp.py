@@ -1,9 +1,8 @@
 """AirComp transceiver tests (paper Section IV, Eqs. 14-17 + Remark 4)."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
+from _hyp import hypothesis, st
 
 from repro.core.aircomp import (aircomp_aggregate, aircomp_simulate_channel,
                                 schedule_by_channel)

@@ -45,11 +45,10 @@ def test_dryrun_end_to_end_smoke():
     run_subprocess("""
 import repro.launch.dryrun as dr
 import jax
-from jax.sharding import AxisType
-dr.make_production_mesh = lambda multi_pod=False: jax.make_mesh(
+from repro.launch.mesh import _make_mesh
+dr.make_production_mesh = lambda multi_pod=False: _make_mesh(
     (2, 2, 2) if multi_pod else (4, 2),
-    ("pod", "data", "model") if multi_pod else ("data", "model"),
-    axis_types=(AxisType.Auto,) * (3 if multi_pod else 2))
+    ("pod", "data", "model") if multi_pod else ("data", "model"))
 import repro.launch.dryrun as d2
 rec = dr.run_case("qwen2-0.5b", "train_4k", multi_pod=False)
 assert rec["hlo_flops_per_device"] > 0

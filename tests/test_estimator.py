@@ -9,12 +9,11 @@ Key invariants, checked with hypothesis-driven problem instances:
   4. Direction law: sphere directions have unit global norm; gaussian
      directions have E‖v‖² = d.
 """
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hyp import hypothesis, st
 
 from repro.core import estimator
 from repro.utils.tree import (sphere_like_tree, tree_axpy, tree_norm,

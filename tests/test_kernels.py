@@ -1,11 +1,10 @@
 """Pallas kernel validation: shape/dtype sweeps, interpret=True vs the
 pure-jnp oracles in kernels/ref.py (deliverable c)."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hyp import hypothesis, st
 
 from repro.kernels import ops, ref
 from repro.kernels.zo_axpy import BLOCK

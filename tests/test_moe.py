@@ -71,13 +71,13 @@ def test_sharded_moe_matches_local_oracle():
     """shard_map expert-parallel MoE == unsharded oracle on 8 fake devices."""
     run_subprocess("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.configs import get_config
+from repro.launch.mesh import _make_mesh
 from repro.models.moe import init_moe, moe_fwd
 cfg = get_config("qwen3-moe-30b-a3b").reduced().replace(capacity_factor=8.0)
 p = init_moe(jax.random.key(0), cfg, jnp.float32)
 x = 0.5 * jax.random.normal(jax.random.key(1), (4, 16, cfg.d_model), jnp.float32)
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = _make_mesh((4, 2), ("data", "model"))
 out_l, aux_l = moe_fwd(p, cfg, x)
 out_s, aux_s = jax.jit(lambda p, x: moe_fwd(p, cfg, x, mesh=mesh))(p, x)
 np.testing.assert_allclose(np.asarray(out_l), np.asarray(out_s), atol=2e-4)

@@ -1,0 +1,200 @@
+"""Flat-buffer ZO hot path (DESIGN.md §7): kernel bit-equivalence against
+the interpreted references, and old-vs-new trajectory agreement.
+
+The load-bearing claims pinned here:
+  1. zo_replay / zo_walk are bit-identical to the pure-jnp references built
+     from the SAME counter convention (per block, both direction kinds).
+  2. flat_apply_coefficients == pytree apply_coefficients(conv="counter")
+     up to fp32 reassociation.
+  3. The fused flat local_iterate walks the same loss trajectory as the
+     pytree path with conv="counter" on the softmax-regression model over
+     ≥ 20 local iterates (fp32 tolerance) — the perf path changes HBM
+     traffic, not the algorithm.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedZOConfig
+from repro.core import estimator, fedzo, seedcomm
+from repro.data.synthetic import make_classification
+from repro.kernels import ops, ref
+from repro.models.simple import softmax_init, softmax_loss
+from repro.utils.flatparams import flat_spec, flatten, unflatten
+
+BR = 4                      # small kernel blocks: 4 rows × 128 lanes = 512
+KEY2 = jax.random.key_data(jax.random.key(1234))
+
+
+# -- 1. kernel bit-equivalence ---------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["normal", "sign"])
+@pytest.mark.parametrize("nblocks", [1, 3])
+def test_zo_replay_bit_equals_reference(kind, nblocks):
+    n = nblocks * BR * 128
+    x = jax.random.normal(jax.random.key(0), (n,), jnp.float32)
+    coeffs = jnp.asarray(np.random.default_rng(2).normal(size=6), jnp.float32)
+    out = ops.zo_replay(x, KEY2, coeffs, kind=kind, block_rows=BR)
+    r = jax.jit(functools.partial(ref.zo_replay_ref, kind=kind))(
+        x.reshape(-1, 128), KEY2, coeffs).reshape(-1)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(r))
+
+
+@pytest.mark.parametrize("kind", ["normal", "sign"])
+def test_zo_walk_bit_equals_reference(kind):
+    n = 2 * BR * 128
+    x = jax.random.normal(jax.random.key(0), (n,), jnp.float32)
+    nn = jnp.asarray([3, 4], jnp.int32)
+    ab = jnp.asarray([-0.25, 0.125], jnp.float32)
+    out = ops.zo_walk(x, KEY2, nn, ab, kind=kind, block_rows=BR)
+    r = jax.jit(functools.partial(ref.zo_walk_ref, kind=kind))(
+        x.reshape(-1, 128), KEY2, nn, ab).reshape(-1)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(r))
+
+
+def test_zo_dirnorms_matches_reference_and_direct():
+    from repro.kernels.zo_axpy import counter_direction_flat
+    d, n_pad, b2 = 900, 2 * BR * 128, 5
+    out = ops.zo_dirnorms(KEY2, d, b2=b2, n_pad=n_pad, block_rows=BR)
+    r = ref.zo_dirnorms_ref(KEY2, d, b2, n_pad, block_rows=BR)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r), rtol=1e-6)
+    direct = jnp.stack([jnp.sum(counter_direction_flat(KEY2, n, d) ** 2)
+                        for n in range(b2)])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(direct), rtol=1e-5)
+
+
+def test_walk_transition_reaches_fresh_perturbation():
+    """x →(+μv0) →(−μv0,+μv1) ... lands where a fresh x+μv_n perturbation
+    would, up to fp32 round-off — the MeZO transition introduces no drift
+    beyond reassociation."""
+    from repro.kernels.zo_axpy import counter_direction_flat
+    n = BR * 128
+    x = jax.random.normal(jax.random.key(3), (n,), jnp.float32)
+    mu = 1e-3
+    xp = x
+    for k in range(6):
+        a = 0.0 if k == 0 else -mu
+        xp = ops.zo_walk(xp, KEY2, [max(k - 1, 0), k], [a, mu],
+                         kind="normal", block_rows=BR)
+    direct = x + mu * counter_direction_flat(KEY2, 5, n)
+    np.testing.assert_allclose(np.asarray(xp), np.asarray(direct), atol=1e-6)
+
+
+# -- 2. flat update == pytree counter-conv update ---------------------------
+
+
+@pytest.mark.parametrize("kind", ["sphere", "gaussian", "rademacher"])
+def test_flat_apply_matches_pytree_counter_conv(kind):
+    params = {"a": jax.random.normal(jax.random.key(0), (300,)),
+              "b": jax.random.normal(jax.random.key(1), (7, 11))}
+    spec = flat_spec(params, block=BR * 128)
+    coeffs = jnp.asarray(np.random.default_rng(3).normal(size=9), jnp.float32)
+    rng = jax.random.key(77)
+
+    flat = unflatten(estimator.flat_apply_coefficients(
+        flatten(params, spec), spec, rng, coeffs, scale=-0.3, kind=kind,
+        block_rows=BR), spec)
+    tree = estimator.apply_coefficients(params, rng, coeffs, scale=-0.3,
+                                        kind=kind, conv="counter")
+    for a, b in zip(jax.tree.leaves(flat), jax.tree.leaves(tree)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_flat_rejects_coordinate():
+    params = {"a": jnp.zeros((64,))}
+    spec = flat_spec(params, block=BR * 128)
+    with pytest.raises(ValueError):
+        estimator.flat_apply_coefficients(
+            flatten(params, spec), spec, jax.random.key(0),
+            jnp.ones((2,)), kind="coordinate", block_rows=BR)
+
+
+def test_seedcomm_wire_format_preserved_on_flat_path():
+    """Same (key, coeffs) message; flat receiver reconstructs the flat
+    client's delta exactly."""
+    cfg = FedZOConfig(local_iters=4, lr=0.02, mu=1e-3, b2=5,
+                      flat_params=True, flat_block_rows=BR)
+    params = {"x": jnp.zeros((20,))}
+    batches = {"target": jnp.ones((4, 20))}
+
+    def loss(p, b):
+        return 0.5 * jnp.sum((p["x"] - b["target"]) ** 2)
+
+    rng = jax.random.key(42)
+    delta, res = fedzo.client_delta(loss, params, batches, rng, cfg)
+    msg = seedcomm.compress(rng, res.coeffs, cfg)
+    assert seedcomm.wire_bytes(msg) < 120
+    recon = seedcomm.reconstruct_delta(msg, params, cfg)
+    for a, b in zip(jax.tree.leaves(delta), jax.tree.leaves(recon)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+
+
+# -- 3. trajectory equivalence on softmax regression ------------------------
+
+
+def test_flat_trajectory_matches_pytree_over_20_iterates():
+    """Acceptance: the flat fused path's loss trajectory matches the pytree
+    path (conv="counter", same directions) within fp32 tolerance over ≥ 20
+    local iterates on the softmax-regression model."""
+    x, y = make_classification(512, 784, 10, seed=0)
+    batch = {"x": jnp.asarray(x[:256]), "y": jnp.asarray(y[:256])}
+    params = softmax_init(None)
+
+    base = FedZOConfig(b2=8, lr=1e-2, mu=1e-3, direction_conv="counter")
+    cfg_tree = dataclasses.replace(base)
+    cfg_flat = dataclasses.replace(base, flat_params=True)
+
+    step_tree = jax.jit(fedzo.make_train_step(softmax_loss, cfg_tree))
+    step_flat = jax.jit(fedzo.make_train_step(softmax_loss, cfg_flat))
+
+    p_t, p_f = params, params
+    losses_t, losses_f = [], []
+    for t in range(22):
+        k = jax.random.key(t)
+        p_t, m_t = step_tree(p_t, batch, k)
+        p_f, m_f = step_flat(p_f, batch, k)
+        losses_t.append(float(m_t["loss"]))
+        losses_f.append(float(m_f["loss"]))
+    losses_t, losses_f = np.asarray(losses_t), np.asarray(losses_f)
+    # both descend ...
+    assert losses_t[-1] < losses_t[0]
+    assert losses_f[-1] < losses_f[0]
+    # ... along the same trajectory (fp32 round-off amplified by the 1/μ
+    # difference quotient bounds the gap, not algorithmic divergence)
+    np.testing.assert_allclose(losses_f, losses_t, rtol=2e-3, atol=2e-4)
+    # final parameters agree too (looser: 22 compounded 1/μ amplifications)
+    for a, b in zip(jax.tree.leaves(p_f), jax.tree.leaves(p_t)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+
+
+def test_flat_local_phase_and_pod_step_run():
+    """The flat path is wired through local_phase and make_pod_round_step."""
+    cfg = FedZOConfig(local_iters=3, b2=4, lr=0.05, mu=1e-3,
+                      flat_params=True, flat_block_rows=BR)
+    params = {"x": jnp.zeros((40,))}
+    batches = {"target": jnp.ones((3, 40))}
+
+    def loss(p, b):
+        return 0.5 * jnp.sum((p["x"] - b["target"]) ** 2)
+
+    res = fedzo.local_phase(loss, params, batches, jax.random.key(0), cfg)
+    assert res.coeffs.shape == (3, 4)
+    assert float(res.losses[-1]) > 0
+
+    class FakeMesh:
+        shape = {"pod": 2}
+
+    def loss_grouped(p, b):
+        return jnp.stack([loss(p, b), loss(p, b) * 1.01])
+
+    step = fedzo.make_pod_round_step(loss_grouped, cfg, FakeMesh())
+    newp, metrics = step(params, {"target": jnp.ones((40,))},
+                         jax.random.key(1))
+    assert metrics["per_pod_loss"].shape == (2,)
+    assert float(metrics["loss"]) > 0
+    assert jnp.all(jnp.isfinite(newp["x"]))
