@@ -1,0 +1,85 @@
+"""Old-vs-new round-engine benchmark: the per-leaf pytree round vs the
+flat-buffer round (DESIGN.md §8) on the softmax-regression model (d = 7850).
+
+Two kinds of rows, as in zo_path_bench:
+
+- ``*_us_per_round`` — measured wall time of one jitted ``round_simulated``
+  over M clients (interpret-mode Pallas on CPU: regression tracking, not a
+  TPU projection). Reported for the plain-mean and the AirComp round.
+- ``*_agg_hbm_passes`` / ``*_agg_bytes`` — the analytic HBM-traffic model
+  of the *aggregation* step over the [M, d] stacked-delta matrix
+  (1 matrix pass = one read of M·d fp32 words). The pytree AirComp path
+  reads the matrix twice (per-row norms, then the per-leaf einsum mean)
+  plus a read+write of the d-sized mean for the noise; the fused kernel
+  (kernels/zo_aircomp.py) reads the matrix ONCE — norms and masked mean
+  in the same sweep — and pays the same d-sized noise pass (zo_walk).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed
+from repro.configs.base import FedZOConfig
+from repro.core import fedzo
+from repro.data.synthetic import make_classification, noniid_shards, \
+    sample_local_batches
+from repro.models.simple import softmax_init, softmax_loss
+from repro.utils.tree import tree_size
+
+import numpy as np
+
+
+def agg_traffic_model(M: int, d: int, *, flat: bool):
+    """Aggregation-step HBM traffic: (passes over the [M, d] delta matrix,
+    total fp32 words moved including the d-sized noise read+write)."""
+    if flat:
+        matrix_passes = 1.0                # fused norms + masked mean
+    else:
+        matrix_passes = 2.0                # _delta_sq_norms, then einsum
+    words = matrix_passes * M * d + 3 * d  # + mean write, noise read+write
+    return matrix_passes, int(words * 4)
+
+
+def run():
+    rows = []
+    M, H, b2 = 4, 2, 4
+    x, y = make_classification(640, 784, 10, seed=0)
+    clients = noniid_shards(x, y, M)
+    nprng = np.random.default_rng(0)
+    per = [sample_local_batches(clients[i], nprng, H, 16) for i in range(M)]
+    batches = jax.tree.map(lambda *xs: jnp.stack([jnp.asarray(v)
+                                                  for v in xs]), *per)
+    params = softmax_init(None)
+    d = tree_size(params)
+    rngs = jax.random.split(jax.random.key(0), M)
+    kc = jax.random.key(1)
+
+    base = FedZOConfig(local_iters=H, b2=b2, lr=1e-3, mu=1e-3)
+    for air in (False, True):
+        cfg_old = dataclasses.replace(base, aircomp=air, snr_db=10.0,
+                                      channel_schedule=air)
+        cfg_new = dataclasses.replace(cfg_old, flat_params=True)
+        tag = "aircomp" if air else "mean"
+
+        r_old = jax.jit(lambda p, b, r, c, cfg=cfg_old: fedzo.round_simulated(
+            softmax_loss, p, b, r, cfg, channel_rng=c)[0])
+        r_new = jax.jit(lambda p, b, r, c, cfg=cfg_new: fedzo.round_simulated(
+            softmax_loss, p, b, r, cfg, channel_rng=c)[0])
+        _, us_old = timed(lambda: r_old(params, batches, rngs, kc), n=3)
+        _, us_new = timed(lambda: r_new(params, batches, rngs, kc), n=3)
+        rows.append((f"round/pytree_{tag}_us_per_round_M{M}_d{d}",
+                     us_old, us_old))
+        rows.append((f"round/flat_{tag}_us_per_round_M{M}_d{d}",
+                     us_new, us_new))
+
+    p_old, b_old = agg_traffic_model(M, d, flat=False)
+    p_new, b_new = agg_traffic_model(M, d, flat=True)
+    rows.append(("round/pytree_agg_hbm_passes_over_Mxd", 0.0, p_old))
+    rows.append(("round/flat_agg_hbm_passes_over_Mxd", 0.0, p_new))
+    rows.append(("round/pytree_agg_bytes", 0.0, b_old))
+    rows.append(("round/flat_agg_bytes", 0.0, b_new))
+    rows.append(("round/agg_traffic_reduction_x", 0.0, b_old / b_new))
+    return rows

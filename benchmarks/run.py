@@ -1,7 +1,8 @@
 """Benchmark harness: one entry per paper table/figure (DESIGN.md §6).
 
-Prints ``name,us_per_call,derived`` CSV. ``--quick`` runs only the kernel and
-roofline benches; default runs everything (≈10-20 min on CPU).
+Prints ``name,us_per_call,derived`` CSV. ``--quick`` runs the kernel,
+ZO-path, round-engine, and roofline benches; default additionally runs the
+paper-figure suites (≈10-20 min on CPU).
 """
 from __future__ import annotations
 
@@ -16,9 +17,11 @@ def main() -> None:
     ap.add_argument("--only", default="")
     args = ap.parse_args()
 
-    from benchmarks import kernels_bench, roofline_report, zo_path_bench
+    from benchmarks import (kernels_bench, roofline_report, round_bench,
+                            zo_path_bench)
     suites = [("kernels", kernels_bench.run),
               ("zo_path", zo_path_bench.run),
+              ("round", round_bench.run),
               ("roofline", roofline_report.run)]
     if not args.quick:
         from benchmarks import paper_figures as pf

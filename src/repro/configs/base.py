@@ -156,5 +156,9 @@ class FedZOConfig:
     aircomp: bool = False
     snr_db: float = 0.0        # P / sigma_w^2
     h_min: float = 0.8
+    # channel-truncation scheduling (Sec. IV-A): draw Rayleigh channels per
+    # round and exclude clients with |h| < h_min from the aggregation (mask
+    # into both the mean and Δ_max; m_effective reported per round)
+    channel_schedule: bool = False
     # beyond-paper: upload {seeds, coefficients} instead of dense deltas
     delta_compression: str = "dense"  # dense | seed

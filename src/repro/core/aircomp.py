@@ -15,11 +15,16 @@ After receive scaling the server holds  y^t = Δ̄^t + ñ_t  with
 
     ñ_t ~ CN(0, σ_w²·Δ_max / (M²·d·P·h_min²) I).                    (Eq. 17)
 
-Two implementations:
-- ``aircomp_aggregate``      — the equivalent real-noise form (used in
-  training loops; model deltas are real so the real projection of ñ applies,
+Three implementations:
+- ``aircomp_aggregate``      — the equivalent real-noise form on a delta
+  pytree (model deltas are real so the real projection of ñ applies,
   variance σ_eff²/2 per real dimension — we keep the paper's full variance
   as the conservative choice and verify equivalence in tests).
+- ``aircomp_aggregate_flat`` — the same statistics on a flat [M, n_pad]
+  delta matrix via the fused one-pass kernel (kernels/zo_aircomp.py): row
+  norms + masked mean in one sweep of the matrix, Eq.-17 noise injected
+  in-kernel (counter convention) with one pass over the d-sized mean. The
+  flat round engine (core/fedzo.py, DESIGN.md §8) aggregates through this.
 - ``aircomp_simulate_channel`` — the explicit complex simulation (per-device
   h_i, transmit scalars, superposition, AWGN, receive scaling) used by the
   tests to verify the closed form and the per-device energy constraint
@@ -30,6 +35,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kops
 from repro.utils.tree import tree_size
 
 # per-round per-device energy budget is d·P with P normalized to 1;
@@ -48,6 +54,22 @@ def schedule_by_channel(rng, n_devices, h_min):
     h = (jax.random.normal(kr, (n_devices,)) +
          1j * jax.random.normal(ki, (n_devices,))) / jnp.sqrt(2.0)
     return h.astype(jnp.complex64), jnp.abs(h) >= h_min
+
+
+def mask_stats(mask, M):
+    """(maskf, m_div, m_sched) for a scheduling mask over M rows.
+
+    ``m_div`` is the clamped mean/noise divisor (never 0, so an all-masked
+    round degenerates to a zero update instead of NaN); ``m_sched`` is the
+    TRUE scheduled-client count — this is what ``m_effective`` reports, so
+    a 0-client round is distinguishable from a 1-client one. The one
+    definition is shared by every aggregation path (pytree, fused-flat,
+    and the masked plain means in core/fedzo.py).
+    """
+    maskf = (jnp.ones((M,), jnp.float32) if mask is None
+             else mask.astype(jnp.float32))
+    m_sched = jnp.sum(maskf)
+    return maskf, jnp.maximum(m_sched, 1.0), m_sched
 
 
 def _delta_sq_norms(deltas):
@@ -70,26 +92,55 @@ def aircomp_aggregate(deltas, rng, *, snr_db, h_min, mask=None):
     sigma_w2 = P_TX / (10.0 ** (snr_db / 10.0))
 
     sq = _delta_sq_norms(deltas)                       # [M]
-    if mask is None:
-        mask = jnp.ones((M,), bool)
-    maskf = mask.astype(jnp.float32)
-    m_eff = jnp.maximum(jnp.sum(maskf), 1.0)
-    delta_max = jnp.max(jnp.where(mask, sq, 0.0))
+    maskf, m_div, m_sched = mask_stats(mask, M)
+    delta_max = jnp.max(jnp.where(maskf > 0, sq, 0.0))
 
-    noise_var = sigma_w2 * delta_max / (m_eff ** 2 * float(d) * P_TX * h_min ** 2)
+    noise_var = sigma_w2 * delta_max / (m_div ** 2 * float(d) * P_TX * h_min ** 2)
     noise_std = jnp.sqrt(noise_var)
 
     leaves, treedef = jax.tree.flatten(deltas)
     out = []
     for i, leaf in enumerate(leaves):
-        mean = jnp.einsum("m...,m->...", leaf.astype(jnp.float32), maskf) / m_eff
+        mean = jnp.einsum("m...,m->...", leaf.astype(jnp.float32), maskf) / m_div
         k = jax.random.fold_in(rng, i)
         noisy = mean + noise_std * jax.random.normal(k, mean.shape, jnp.float32)
         out.append(noisy.astype(leaf.dtype))
     agg = jax.tree.unflatten(treedef, out)
     stats = {"aircomp_noise_std": noise_std, "delta_max": delta_max,
-             "m_effective": m_eff}
+             "m_effective": m_sched}
     return agg, stats
+
+
+def aircomp_aggregate_flat(deltas, rng, *, snr_db, h_min, d=None, mask=None,
+                           block_rows=None, interpret=None):
+    """Eq.-17 aggregation of a flat delta matrix [M, n_pad] (fused kernel).
+
+    One HBM pass over the matrix yields the per-row squared norms and the
+    masked scaled mean together (``kernels/zo_aircomp.py``); Δ_max and the
+    noise scale are scalar work on the [M] norms, and the noise is one
+    ``zo_walk`` pass over the mean with the N(0,1) field regenerated
+    in-kernel. Same Δ_max / m_eff / noise_std as ``aircomp_aggregate``
+    (the noise *realization* differs: counter convention vs per-leaf
+    fold_in). ``d`` is the valid flat length (pad indices carry walk
+    residue and are excluded from the norms); defaults to the full width.
+    """
+    M, n = deltas.shape
+    d = n if d is None else d
+    sigma_w2 = P_TX / (10.0 ** (snr_db / 10.0))
+    maskf, m_div, m_sched = mask_stats(mask, M)
+    mean, sq = kops.aircomp_reduce(deltas, maskf / m_div, d,
+                                   block_rows=block_rows, interpret=interpret)
+    delta_max = jnp.max(jnp.where(maskf > 0, sq, 0.0))
+    noise_var = sigma_w2 * delta_max / (m_div ** 2 * float(d) * P_TX * h_min ** 2)
+    noise_std = jnp.sqrt(noise_var)
+    out = kops.zo_walk(mean, jax.random.key_data(rng),
+                       jnp.zeros((2,), jnp.int32),
+                       jnp.stack([noise_std, jnp.float32(0.0)]),
+                       kind="normal", block_rows=block_rows,
+                       interpret=interpret)
+    stats = {"aircomp_noise_std": noise_std, "delta_max": delta_max,
+             "m_effective": m_sched}
+    return out, stats
 
 
 def aircomp_simulate_channel(deltas_flat, rng, *, snr_db, h_min):

@@ -7,7 +7,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FedZOConfig
-from repro.core.aircomp import aircomp_aggregate
+from repro.core.aircomp import (aircomp_aggregate, mask_stats,
+                                schedule_by_channel)
 from repro.utils.tree import tree_add, tree_axpy, tree_scale, tree_sub
 
 
@@ -24,19 +25,38 @@ def local_phase(loss_fn, params, batches, cfg: FedZOConfig):
 
 def round_simulated(loss_fn, server_params, client_batches, cfg: FedZOConfig,
                     *, channel_rng=None):
-    """One FedAvg round over M clients (batches leading axes [M, H, ...])."""
+    """One FedAvg round over M clients (batches leading axes [M, H, ...]).
+
+    Honors the same channel-truncation scheduling as the FedZO round
+    (cfg.channel_schedule): masked clients are excluded from the mean and
+    Δ_max, m_effective lands in the metrics.
+    """
     def one_client(batches):
         p_fin, losses = local_phase(loss_fn, server_params, batches, cfg)
         return tree_sub(p_fin, server_params), losses
 
     deltas, losses = jax.vmap(one_client)(client_batches)
+    M = losses.shape[0]
+    mask = None
+    noise_rng = channel_rng
+    stats = {}
+    if cfg.channel_schedule and channel_rng is not None:
+        k_sched, noise_rng = jax.random.split(channel_rng)
+        _, mask = schedule_by_channel(k_sched, M, cfg.h_min)
     if cfg.aircomp and channel_rng is not None:
-        agg, _ = aircomp_aggregate(deltas, channel_rng, snr_db=cfg.snr_db,
-                                   h_min=cfg.h_min)
+        agg, stats = aircomp_aggregate(deltas, noise_rng, snr_db=cfg.snr_db,
+                                       h_min=cfg.h_min, mask=mask)
+    elif mask is not None:
+        maskf, m_div, m_sched = mask_stats(mask, M)
+        agg = jax.tree.map(
+            lambda x: (jnp.einsum("m...,m->...", x.astype(jnp.float32),
+                                  maskf) / m_div).astype(x.dtype), deltas)
+        stats = {"m_effective": m_sched}
     else:
-        agg = tree_scale(1.0 / losses.shape[0],
+        agg = tree_scale(1.0 / M,
                          jax.tree.map(lambda x: jnp.sum(x, 0), deltas))
-    return tree_add(server_params, agg), {"mean_local_loss": jnp.mean(losses)}
+    return tree_add(server_params, agg), {"mean_local_loss": jnp.mean(losses),
+                                          **stats}
 
 
 def make_train_step(loss_fn, cfg: FedZOConfig):

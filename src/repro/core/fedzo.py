@@ -31,7 +31,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import FedZOConfig
 from repro.core import estimator
-from repro.core.aircomp import aircomp_aggregate
+from repro.core.aircomp import (aircomp_aggregate, aircomp_aggregate_flat,
+                                mask_stats, schedule_by_channel)
 from repro.utils.flatparams import flat_geometry, flatten, unflatten
 from repro.utils.tree import tree_add, tree_scale, tree_sub
 
@@ -91,6 +92,21 @@ def local_iterate(loss_fn, params, batch, rng, cfg: FedZOConfig):
     return new_params, coeffs, base
 
 
+def _flat_phase_scan(loss_fn, buf0, spec, br, keys, batches, cfg):
+    """Scan H flat local iterates over a flat buffer — THE flat local
+    phase, shared by ``local_phase`` and the flat round engine so the two
+    can never walk different iterate protocols. Returns
+    (final buf, coeffs [H, b2], losses [H])."""
+    def fbody(carry, inp):
+        k, batch = inp
+        b, coeffs, base = flat_local_iterate(loss_fn, carry, spec, batch,
+                                             k, cfg, block_rows=br)
+        return b, (coeffs, base)
+
+    buf, (coeffs, losses) = jax.lax.scan(fbody, buf0, (keys, batches))
+    return buf, coeffs, losses
+
+
 def local_phase(loss_fn, params, batches, rng, cfg: FedZOConfig) -> LocalResult:
     """H local iterates (Algorithm 1 inner loop).
 
@@ -103,15 +119,8 @@ def local_phase(loss_fn, params, batches, rng, cfg: FedZOConfig) -> LocalResult:
 
     if cfg.flat_params:
         spec, br = _flat_setup(params, cfg)
-
-        def fbody(carry, inp):
-            k, batch = inp
-            b, coeffs, base = flat_local_iterate(loss_fn, carry, spec, batch,
-                                                 k, cfg, block_rows=br)
-            return b, (coeffs, base)
-
-        buf, (coeffs, losses) = jax.lax.scan(
-            fbody, flatten(params, spec), (keys, batches))
+        buf, coeffs, losses = _flat_phase_scan(
+            loss_fn, flatten(params, spec), spec, br, keys, batches, cfg)
         return LocalResult(unflatten(buf, spec), coeffs, losses)
 
     def body(carry, inp):
@@ -139,20 +148,73 @@ def round_simulated(loss_fn, server_params, client_batches, client_rngs,
     ``momentum``: optional server-momentum state (FedOpt-style — beyond
     paper); pass a zeros-like tree and cfg.server_momentum > 0 to enable.
     Returns (new_server_params, metrics dict[, new_momentum]).
+
+    With cfg.flat_params the whole round runs on the flat buffer
+    (DESIGN.md §8): the server params are flattened ONCE, the flat local
+    phase is vmapped over the M clients so the client deltas materialize
+    as one [M, n_pad] matrix, and aggregation (masked mean or the fused
+    one-pass AirComp kernel) happens on that matrix before a single
+    unflatten.
+
+    cfg.channel_schedule enables the paper's channel-truncation scheduling
+    (Sec. IV-A): a Rayleigh draw from ``channel_rng`` masks out clients
+    with |h| < h_min; masked rows are excluded from both the mean and
+    Δ_max and ``m_effective`` is reported in the metrics.
     """
-    def one_client(batches, rng):
-        delta, res = client_delta(loss_fn, server_params, batches, rng, cfg)
-        return delta, res.losses
+    M = client_rngs.shape[0]
+    mask = None
+    noise_rng = channel_rng
+    air_stats = {}
+    if cfg.channel_schedule and channel_rng is not None:
+        k_sched, noise_rng = jax.random.split(channel_rng)
+        _, mask = schedule_by_channel(k_sched, M, cfg.h_min)
 
-    deltas, losses = jax.vmap(one_client)(client_batches, client_rngs)
+    if cfg.flat_params:
+        spec, br = _flat_setup(server_params, cfg)
+        buf0 = flatten(server_params, spec)
+        keys = jax.vmap(lambda r: jax.random.split(r, cfg.local_iters))(
+            client_rngs)
 
-    if cfg.aircomp and channel_rng is not None:
-        agg, air_stats = aircomp_aggregate(
-            deltas, channel_rng, snr_db=cfg.snr_db, h_min=cfg.h_min)
+        def one_client(batches, ks):
+            buf, _, base = _flat_phase_scan(loss_fn, buf0, spec, br, ks,
+                                            batches, cfg)
+            return buf - buf0, base
+
+        deltas, losses = jax.vmap(one_client)(client_batches, keys)
+
+        if cfg.aircomp and channel_rng is not None:
+            agg_flat, air_stats = aircomp_aggregate_flat(
+                deltas, noise_rng, snr_db=cfg.snr_db, h_min=cfg.h_min,
+                d=spec.d, mask=mask, block_rows=br)
+        elif mask is not None:
+            maskf, m_div, m_sched = mask_stats(mask, M)
+            agg_flat = jnp.einsum("mn,m->n", deltas, maskf) / m_div
+            air_stats = {"m_effective": m_sched}
+        else:
+            agg_flat = jnp.mean(deltas, axis=0)
+        agg = unflatten(agg_flat, spec)
     else:
-        agg = tree_scale(1.0 / losses.shape[0],
-                         jax.tree.map(lambda x: jnp.sum(x, 0), deltas))
-        air_stats = {}
+        def one_client(batches, rng):
+            delta, res = client_delta(loss_fn, server_params, batches, rng,
+                                      cfg)
+            return delta, res.losses
+
+        deltas, losses = jax.vmap(one_client)(client_batches, client_rngs)
+
+        if cfg.aircomp and channel_rng is not None:
+            agg, air_stats = aircomp_aggregate(
+                deltas, noise_rng, snr_db=cfg.snr_db, h_min=cfg.h_min,
+                mask=mask)
+        elif mask is not None:
+            maskf, m_div, m_sched = mask_stats(mask, M)
+            agg = jax.tree.map(
+                lambda x: (jnp.einsum("m...,m->...", x.astype(jnp.float32),
+                                      maskf) / m_div).astype(x.dtype),
+                deltas)
+            air_stats = {"m_effective": m_sched}
+        else:
+            agg = tree_scale(1.0 / M,
+                             jax.tree.map(lambda x: jnp.sum(x, 0), deltas))
 
     if momentum is not None and cfg.server_momentum > 0:
         momentum = jax.tree.map(
@@ -197,17 +259,24 @@ def make_pod_round_step(loss_fn_grouped, cfg: FedZOConfig, mesh) -> Callable:
         def flat_step(params, batch, rng):
             spec, br = _flat_setup(params, cfg)
             buf = flatten(params, spec)
+            # sphere inv-norms computed ONCE and shared by both ends — the
+            # same invariant flat_local_iterate documents (zo_dirnorms
+            # regenerates all b2 directions, so running it twice doubles
+            # the direction-generation compute of the step)
+            inv = estimator.flat_inv_norms(
+                estimator._key_data(rng), spec, cfg.b2, cfg.estimator,
+                block_rows=br)
             # flat_coefficients handles vector-valued (grouped) losses:
             # coeffs come back [b2, n_pod]
             coeffs, base = estimator.flat_coefficients(
                 loss_fn_grouped, buf, spec, batch, rng,
                 mu=cfg.mu, b2=cfg.b2, kind=cfg.estimator,
-                central=cfg.central, block_rows=br)
+                central=cfg.central, block_rows=br, inv=inv)
             # the only cross-pod uplink: mean of per-pod coefficients
             c_mean = jnp.mean(coeffs, axis=1)               # [b2]
             buf = estimator.flat_apply_coefficients(
                 buf, spec, rng, c_mean, scale=-cfg.lr, kind=cfg.estimator,
-                block_rows=br)
+                block_rows=br, inv=inv)
             return unflatten(buf, spec), {
                 "loss": jnp.mean(base), "per_pod_loss": base,
                 "coeff_pod_spread": jnp.std(coeffs, axis=1).mean()}

@@ -7,9 +7,10 @@ FedZO's local delta is a linear combination of PRNG-generated directions:
 so a client can upload {seed_i, c_i ∈ R^{H·b2}} — H·b2 scalars instead of d
 floats. Every receiver (server or peer pod) replays the seeds to reconstruct
 Δ_i exactly (bit-exact: fold_in is deterministic). Uplink bytes per round per
-client drop from 4d to 4·H·b2 (+ a 16-byte key): for deepseek-v3-671b at
-H=5, b2=4 that is 2.7 TB → 96 B, a ~10^10× reduction — the *digital*
-counterpart of the paper's analog AirComp aggregation.
+client drop from 4d to 4·H·b2 (+ the 8-byte threefry key and a 4-byte lr):
+for deepseek-v3-671b at H=5, b2=4 that is 2.7 TB → 92 B, a ~10^10×
+reduction — the *digital* counterpart of the paper's analog AirComp
+aggregation.
 
 The catch (recorded honestly): the server pays H·b2 axpy passes over the
 parameter vector per client to reconstruct, so this trades uplink bandwidth
@@ -31,7 +32,7 @@ import jax.numpy as jnp
 from repro.configs.base import FedZOConfig
 from repro.core import estimator
 from repro.utils.flatparams import flat_geometry, unflatten
-from repro.utils.tree import tree_add, tree_scale, tree_zeros_like
+from repro.utils.tree import tree_scale, tree_zeros_like
 
 
 def compress(rng, coeffs, cfg: FedZOConfig):
@@ -41,7 +42,11 @@ def compress(rng, coeffs, cfg: FedZOConfig):
 
 
 def wire_bytes(msg) -> int:
-    return int(msg["coeffs"].size * 4 + 16 + 4)
+    """Exact uplink bytes of one message: key words + coeffs + the lr
+    scalar, all from actual array nbytes (threefry key_data is 2×uint32 =
+    8 B, not the 16 a typed-key pickle would cost)."""
+    return int(jnp.asarray(msg["key"]).nbytes + msg["coeffs"].nbytes
+               + jnp.asarray(msg["lr"]).nbytes)
 
 
 def reconstruct_delta(msg, params_like, cfg: FedZOConfig):
@@ -81,9 +86,62 @@ def reconstruct_delta(msg, params_like, cfg: FedZOConfig):
     return delta
 
 
+def stack_messages(msgs):
+    """Stack M wire messages into dense arrays: (keys [M, 2] uint32,
+    coeffs [M, H, b2], lrs [M]). All messages must share (H, b2)."""
+    keys = jnp.stack([jnp.asarray(m["key"], jnp.uint32) for m in msgs])
+    coeffs = jnp.stack([m["coeffs"] for m in msgs])
+    lrs = jnp.stack([jnp.asarray(m["lr"], jnp.float32) for m in msgs])
+    return keys, coeffs, lrs
+
+
+def _iterate_keys(keys, H):
+    """[M, 2] round-key data → [M·H, 2] per-iterate key data — the same
+    ``split(key, H)`` replay every receiver of a single message performs."""
+    def one(k2):
+        return jax.random.key_data(
+            jax.random.split(jax.random.wrap_key_data(k2), H))
+
+    return jax.vmap(one)(keys).reshape(-1, 2)
+
+
 def aggregate(msgs, params_like, cfg: FedZOConfig):
-    """Mean of M reconstructed deltas. msgs: list of compress() outputs."""
-    total = tree_zeros_like(params_like)
-    for msg in msgs:
-        total = tree_add(total, reconstruct_delta(msg, params_like, cfg))
-    return tree_scale(1.0 / len(msgs), total)
+    """Mean of M reconstructed deltas as ONE batched seed replay.
+
+    msgs: list of compress() outputs. Instead of M Python-level
+    reconstructions (each tracing its own H-scan), the stacked [M, H, b2]
+    coefficients replay as a single scan over the M·H (key, coeffs [b2])
+    iterate records: the accumulator is one flat buffer (cfg.flat_params)
+    or one delta pytree, and each step is one zo_replay pass / one
+    b2-axpy replay. Trace size is O(1) in M, and the fp32 accumulation
+    order (m-ascending, h-ascending) matches the old loop.
+    """
+    M = len(msgs)
+    keys, coeffs, lrs = stack_messages(msgs)
+    H, b2 = coeffs.shape[1], coeffs.shape[2]
+    k_mh = _iterate_keys(keys, H)
+    c_mh = coeffs.reshape(M * H, b2)
+    lr_mh = jnp.repeat(lrs, H)
+
+    if cfg.flat_params:
+        spec, br = flat_geometry(params_like, cfg.flat_block_rows)
+
+        def fbody(buf, inp):
+            k2, c, lr = inp
+            return estimator.flat_apply_coefficients(
+                buf, spec, k2, c, scale=-lr, kind=cfg.estimator,
+                block_rows=br), None
+
+        buf, _ = jax.lax.scan(fbody, jnp.zeros((spec.n_pad,), jnp.float32),
+                              (k_mh, c_mh, lr_mh))
+        return unflatten(buf / M, spec)
+
+    def body(delta, inp):
+        k2, c, lr = inp
+        return estimator.apply_coefficients(
+            delta, jax.random.wrap_key_data(k2), c, scale=-lr,
+            kind=cfg.estimator, conv=cfg.direction_conv), None
+
+    delta, _ = jax.lax.scan(body, tree_zeros_like(params_like),
+                            (k_mh, c_mh, lr_mh))
+    return tree_scale(1.0 / M, delta)

@@ -17,7 +17,7 @@ import numpy as np
 from repro.configs.base import FedZOConfig
 from repro.core import fedavg, fedzo, seedcomm
 from repro.data.synthetic import sample_local_batches
-from repro.utils.tree import tree_add, tree_scale
+from repro.utils.tree import tree_add, tree_bytes, tree_zeros_like
 
 
 @dataclass
@@ -33,10 +33,20 @@ class FedServer:
     def __post_init__(self):
         self._np_rng = np.random.default_rng(self.cfg.seed)
         self._key = jax.random.key(self.cfg.seed)
+        self._momentum = None
         if self.algo == "fedzo":
-            self._round = jax.jit(
-                lambda p, b, r, ch: fedzo.round_simulated(
-                    self.loss_fn, p, b, r, self.cfg, channel_rng=ch))
+            if self.cfg.server_momentum > 0:
+                # momentum state lives on the server and threads through
+                # every round (round_simulated returns the updated state)
+                self._momentum = tree_zeros_like(self.params)
+                self._round = jax.jit(
+                    lambda p, b, r, ch, m: fedzo.round_simulated(
+                        self.loss_fn, p, b, r, self.cfg, channel_rng=ch,
+                        momentum=m))
+            else:
+                self._round = jax.jit(
+                    lambda p, b, r, ch: fedzo.round_simulated(
+                        self.loss_fn, p, b, r, self.cfg, channel_rng=ch))
         elif self.algo == "fedavg":
             self._round = jax.jit(
                 lambda p, b, ch: fedavg.round_simulated(
@@ -63,7 +73,12 @@ class FedServer:
         self._key, kr, kc = jax.random.split(self._key, 3)
         if self.algo == "fedzo":
             rngs = jax.random.split(kr, len(chosen))
-            self.params, metrics = self._round(self.params, batches, rngs, kc)
+            if self._momentum is not None:
+                self.params, metrics, self._momentum = self._round(
+                    self.params, batches, rngs, kc, self._momentum)
+            else:
+                self.params, metrics = self._round(self.params, batches,
+                                                   rngs, kc)
         else:
             self.params, metrics = self._round(self.params, batches, kc)
         metrics = {k: float(v) for k, v in metrics.items()}
@@ -84,12 +99,23 @@ class FedServer:
 
 def run_seed_compressed_round(loss_fn, params, clients_batches, rngs, cfg):
     """Reference digital-uplink round: each client ships (key, coeffs); the
-    server replays seeds. Returns (params', wire_bytes_total, dense_bytes)."""
-    msgs = []
-    for batches, rng in zip(clients_batches, rngs):
-        res = fedzo.local_phase(loss_fn, params, batches, rng, cfg)
-        msgs.append(seedcomm.compress(rng, res.coeffs, cfg))
+    server replays seeds. The M local phases run as ONE vmapped program
+    over stacked [M, H, ...] batches and the server replay is one batched
+    scan (seedcomm.aggregate). ``clients_batches`` may be a list of
+    per-client batch trees or an already-stacked tree; ``rngs`` a list or a
+    stacked [M] key array. Returns (params', wire_bytes_total,
+    dense_bytes) with both byte counts dtype-exact (actual .nbytes)."""
+    if isinstance(clients_batches, (list, tuple)):
+        clients_batches = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                       *clients_batches)
+    if isinstance(rngs, (list, tuple)):
+        rngs = jnp.stack(list(rngs))
+    res = jax.vmap(
+        lambda b, r: fedzo.local_phase(loss_fn, params, b, r, cfg))(
+        clients_batches, rngs)
+    M = res.coeffs.shape[0]
+    msgs = [seedcomm.compress(rngs[i], res.coeffs[i], cfg) for i in range(M)]
     delta = seedcomm.aggregate(msgs, params, cfg)
-    dense_bytes = sum(l.size * 4 for l in jax.tree.leaves(params)) * len(msgs)
+    dense_bytes = tree_bytes(params) * M
     wire = sum(seedcomm.wire_bytes(m) for m in msgs)
     return tree_add(params, delta), wire, dense_bytes

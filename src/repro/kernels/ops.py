@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import rmsnorm as _rn
+from repro.kernels import zo_aircomp as _zac
 from repro.kernels import zo_axpy as _za
 
 
@@ -96,6 +97,26 @@ def zo_dirnorms(key2, d, *, b2, n_pad=None, kind="normal", interpret=None,
     return _za.zo_dirnorms(key2, d, b2=b2, n_pad=n_pad, kind=kind,
                            interpret=_auto_interpret(interpret),
                            block_rows=block_rows)
+
+
+def aircomp_reduce(deltas, scale, d, *, interpret=None, block_rows=None):
+    """Masked scaled row-combination + per-row ‖·[:d]‖² of deltas [M, N]
+    in ONE pass over the matrix. Returns (mean [N] fp32, sq [M] fp32).
+
+    ``scale`` [M] is the per-row mean weight (maskf/m_eff); ``d`` is the
+    valid flat length (indices ≥ d excluded from the norms).
+    """
+    block_rows = block_rows or _za.BLOCK_ROWS
+    per = block_rows * _za.LANES
+    m, n = deltas.shape
+    pad = (-n) % per
+    if pad:
+        deltas = jnp.pad(deltas, ((0, 0), (0, pad)))
+    x3 = deltas.reshape(m, -1, _za.LANES)
+    mean2, sq = _zac.aircomp_reduce(
+        x3, jnp.asarray(scale, jnp.float32), jnp.asarray([d], jnp.int32),
+        interpret=_auto_interpret(interpret), block_rows=block_rows)
+    return mean2.reshape(-1)[:n], sq
 
 
 def attention(q, k, v, *, causal=True, window=0, scale=None,

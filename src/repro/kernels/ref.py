@@ -84,6 +84,27 @@ def zo_dirnorms_ref(key2, d, b2, n_pad, *, kind="normal", block_rows=None):
     return jnp.stack(out)
 
 
+def aircomp_reduce_ref(x3, scale, d, *, block_rows=None):
+    """Oracle for aircomp_reduce: same per-block, row-ascending partial-sum
+    order over x3 [M, R, 128]. Returns (mean [R, 128], sq [M])."""
+    from repro.kernels.zo_axpy import BLOCK_ROWS, LANES
+    block_rows = block_rows or BLOCK_ROWS
+    m, r, lanes = x3.shape
+    per = block_rows * lanes
+    sq = [jnp.float32(0.0)] * m
+    mean_blocks = []
+    for i in range(r // block_rows):
+        idx = jnp.uint32(i * per) + jnp.arange(per, dtype=jnp.uint32)
+        valid = (idx < jnp.uint32(d)).reshape(block_rows, lanes)
+        acc = jnp.zeros((block_rows, lanes), jnp.float32)
+        for mi in range(m):
+            x = x3[mi, i * block_rows:(i + 1) * block_rows].astype(jnp.float32)
+            sq[mi] = sq[mi] + jnp.sum(jnp.where(valid, x * x, 0.0))
+            acc = acc + scale[mi] * x
+        mean_blocks.append(acc)
+    return jnp.concatenate(mean_blocks, axis=0), jnp.stack(sq)
+
+
 def rmsnorm_ref(x, scale, *, eps=1e-6):
     xf = x.astype(jnp.float32)
     ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)

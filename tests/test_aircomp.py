@@ -1,11 +1,16 @@
-"""AirComp transceiver tests (paper Section IV, Eqs. 14-17 + Remark 4)."""
+"""AirComp transceiver tests (paper Section IV, Eqs. 14-17 + Remark 4),
+including the channel-truncation mask semantics and the fused one-pass
+aggregation kernel (kernels/zo_aircomp.py)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 from _hyp import hypothesis, st
 
-from repro.core.aircomp import (aircomp_aggregate, aircomp_simulate_channel,
-                                schedule_by_channel)
+from repro.core.aircomp import (aircomp_aggregate, aircomp_aggregate_flat,
+                                aircomp_simulate_channel, schedule_by_channel)
+from repro.kernels import ops, ref
+
+BR = 4  # small kernel blocks for CPU interpret mode: 4 rows × 128 lanes
 
 hypothesis.settings.register_profile(
     "ci", deadline=None, max_examples=10,
@@ -81,6 +86,108 @@ def test_schedule_rate_matches_rayleigh(h_min):
     h, mask = schedule_by_channel(jax.random.key(0), 20000, h_min)
     rate = float(jnp.mean(mask.astype(jnp.float32)))
     assert abs(rate - np.exp(-h_min ** 2)) < 0.02
+
+
+def test_mask_excludes_rows_from_mean_and_delta_max():
+    """Channel-truncation semantics: a masked-out row contributes to
+    neither the mean nor Δ_max, and m_effective counts only scheduled
+    rows. The masked row here has a huge norm so leakage into Δ_max (and
+    hence the noise scale) would be unmistakable."""
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=(4, 256)).astype(np.float32)
+    base[2] *= 1e3                                 # the masked-out row
+    deltas = {"w": jnp.asarray(base)}
+    mask = jnp.asarray([True, True, False, True])
+    agg, stats = aircomp_aggregate(deltas, jax.random.key(0), snr_db=200.0,
+                                   h_min=0.8, mask=mask)
+    expect = base[[0, 1, 3]].mean(axis=0)
+    np.testing.assert_allclose(np.asarray(agg["w"]), expect, atol=1e-4)
+    assert float(stats["m_effective"]) == 3.0
+    sq = np.sum(base ** 2, axis=1)
+    np.testing.assert_allclose(float(stats["delta_max"]),
+                               sq[[0, 1, 3]].max(), rtol=1e-5)
+    assert float(stats["delta_max"]) < sq[2]
+
+
+def test_all_masked_round_degenerates_safely():
+    """An all-masked round (no device scheduled) must not divide by zero:
+    the aggregate is exactly zero (a no-op server update) with zero noise,
+    in both the pytree and fused-flat implementations — and m_effective
+    truthfully reports 0 (only the internal divisor is clamped)."""
+    deltas = jnp.asarray(np.random.default_rng(1).normal(size=(3, 256)),
+                         jnp.float32)
+    mask = jnp.zeros((3,), bool)
+    agg, stats = aircomp_aggregate({"w": deltas}, jax.random.key(0),
+                                   snr_db=0.0, h_min=0.8, mask=mask)
+    np.testing.assert_array_equal(np.asarray(agg["w"]),
+                                  np.zeros_like(deltas[0]))
+    assert float(stats["aircomp_noise_std"]) == 0.0
+    assert float(stats["m_effective"]) == 0.0
+    fagg, fstats = aircomp_aggregate_flat(deltas, jax.random.key(0),
+                                          snr_db=0.0, h_min=0.8, mask=mask,
+                                          block_rows=BR)
+    np.testing.assert_array_equal(np.asarray(fagg),
+                                  np.zeros_like(deltas[0]))
+    assert float(fstats["aircomp_noise_std"]) == 0.0
+    assert float(fstats["m_effective"]) == 0.0
+
+
+def test_aircomp_reduce_kernel_matches_reference():
+    """The fused kernel agrees with its pure-jnp oracle (same per-block,
+    row-ascending partial-sum order) including the d-masking of padding."""
+    m, blocks = 3, 2
+    n = blocks * BR * 128
+    d = n - 37                                      # exercise pad masking
+    x = jax.random.normal(jax.random.key(0), (m, n), jnp.float32)
+    scale = jnp.asarray([0.5, 0.0, 0.25], jnp.float32)
+    mean, sq = ops.aircomp_reduce(x, scale, d, block_rows=BR)
+    rmean, rsq = ref.aircomp_reduce_ref(x.reshape(m, -1, 128), scale, d,
+                                        block_rows=BR)
+    np.testing.assert_allclose(np.asarray(mean),
+                               np.asarray(rmean).reshape(-1), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(sq), np.asarray(rsq), rtol=1e-6)
+    # and with the direct formula
+    direct_sq = np.sum(np.asarray(x[:, :d]) ** 2, axis=1)
+    np.testing.assert_allclose(np.asarray(sq), direct_sq, rtol=1e-5)
+    direct_mean = np.einsum("mn,m->n", np.asarray(x), np.asarray(scale))
+    np.testing.assert_allclose(np.asarray(mean), direct_mean, atol=1e-5)
+
+
+def test_fused_flat_matches_pytree_aggregate():
+    """aircomp_aggregate_flat reproduces aircomp_aggregate exactly on the
+    deterministic parts (mean, Δ_max, m_eff, noise_std) under a mask —
+    only the noise realization differs (counter convention vs fold_in)."""
+    deltas = jnp.asarray(np.random.default_rng(2).normal(size=(5, 640)),
+                         jnp.float32)
+    mask = jnp.asarray([True, False, True, True, False])
+    agg_t, s_t = aircomp_aggregate({"w": deltas}, jax.random.key(1),
+                                   snr_db=200.0, h_min=0.8, mask=mask)
+    agg_f, s_f = aircomp_aggregate_flat(deltas, jax.random.key(1),
+                                        snr_db=200.0, h_min=0.8, mask=mask,
+                                        block_rows=BR)
+    np.testing.assert_allclose(np.asarray(agg_f), np.asarray(agg_t["w"]),
+                               atol=1e-5)
+    for k in ("delta_max", "m_effective", "aircomp_noise_std"):
+        np.testing.assert_allclose(float(s_f[k]), float(s_t[k]), rtol=1e-5)
+
+
+def test_fused_flat_noise_variance_matches_closed_form():
+    """The fused aggregation's error variance matches the Eq.-17 closed
+    form σ_w²Δmax/(M²dPh²) — the same closed form the explicit complex
+    simulation (aircomp_simulate_channel) is validated against."""
+    rng = np.random.default_rng(3)
+    M, d = 4, 512
+    deltas = jnp.asarray(rng.normal(size=(M, d)), jnp.float32)
+    sq = np.sum(np.asarray(deltas) ** 2, axis=1)
+    snr_db, h_min = 0.0, 0.8
+    expected_var = 1.0 * sq.max() / (M ** 2 * d * 1.0 * h_min ** 2)
+    mean = np.mean(np.asarray(deltas), axis=0)
+    f = jax.jit(lambda k: aircomp_aggregate_flat(
+        deltas, k, snr_db=snr_db, h_min=h_min, block_rows=BR)[0])
+    errs = [np.asarray(f(jax.random.key(s))) - mean for s in range(200)]
+    emp_var = np.var(np.stack(errs))
+    assert 0.7 * expected_var < emp_var < 1.4 * expected_var, \
+        (emp_var, expected_var)
 
 
 def test_noise_shrinks_as_updates_shrink():

@@ -37,10 +37,13 @@ def test_forward_loss_finite(arch, built):
     assert 0.0 < float(loss) < 3 * np.log(cfg.vocab)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_fedzo_train_step_descends(arch, built):
     """One FedZO iterate must run and keep the model finite on every arch —
-    the black-box applicability claim of DESIGN.md §Arch-applicability."""
+    the black-box applicability claim of DESIGN.md §Arch-applicability.
+    Marked slow: the 12-arch ZO-trajectory sweep is ~4 min of the suite;
+    the fast CI job keeps per-arch coverage via test_forward_loss_finite."""
     cfg, m, params = built[arch]
     batch = make_batch(m, SHAPE, jax.random.key(2))
     fcfg = FedZOConfig(b2=2, lr=1e-4, mu=1e-3)

@@ -1,5 +1,8 @@
 """Algorithm-level tests for FedZO (paper Algorithm 1 + Theorems 1-2
-qualitative behavior) and the seed-compressed delta path."""
+qualitative behavior), the flat-buffer round engine, channel-truncation
+scheduling, and the seed-compressed delta path."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,9 +11,11 @@ import pytest
 from repro.configs.base import FedZOConfig
 from repro.core import fedzo, seedcomm
 from repro.data.synthetic import make_classification, noniid_shards
-from repro.fed.server import FedServer
+from repro.fed.server import FedServer, run_seed_compressed_round
 from repro.models.simple import softmax_accuracy, softmax_init, softmax_loss
-from repro.utils.tree import tree_norm, tree_sub
+from repro.utils.tree import tree_bytes, tree_norm, tree_sub
+
+BR = 4  # small kernel blocks for CPU interpret mode
 
 
 def _quad_loss(params, batch):
@@ -57,6 +62,144 @@ def test_round_simulated_full_vs_partial():
     p_full, m = fedzo.round_simulated(_quad_loss, params, batches, rngs, cfg)
     err_full = float(tree_norm(tree_sub(p_full, {"x": target})))
     assert err_full < float(tree_norm(tree_sub(params, {"x": target})))
+
+
+def test_flat_round_matches_pytree_round():
+    """The flat round engine walks the pytree reference round's directions
+    (conv="counter"): one round over M clients lands on the same server
+    params up to fp32 reassociation (amplified by the 1/μ quotient)."""
+    cfg_tree = FedZOConfig(local_iters=2, lr=0.05, mu=1e-3, b2=6,
+                           direction_conv="counter")
+    cfg_flat = dataclasses.replace(cfg_tree, flat_params=True,
+                                   flat_block_rows=BR)
+    params = {"x": jnp.zeros((300,))}
+    batches = {"target": jnp.ones((4, 2, 300))}
+    rngs = jax.random.split(jax.random.key(0), 4)
+    p_t, m_t = fedzo.round_simulated(_quad_loss, params, batches, rngs,
+                                     cfg_tree)
+    p_f, m_f = fedzo.round_simulated(_quad_loss, params, batches, rngs,
+                                     cfg_flat)
+    np.testing.assert_allclose(float(m_f["mean_local_loss"]),
+                               float(m_t["mean_local_loss"]), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(p_f["x"]), np.asarray(p_t["x"]),
+                               atol=1e-2, rtol=1e-3)
+
+
+def test_flat_round_seed_replay_exact():
+    """Acceptance: a flat-round client delta is reproducible from its
+    (key, coeffs) message — the replayed directions are bit-exact (counter
+    convention), so the reconstruction matches to the fp32 round-off of
+    accumulating onto zeros instead of the live buffer."""
+    cfg = FedZOConfig(local_iters=3, lr=0.02, mu=1e-3, b2=5,
+                      flat_params=True, flat_block_rows=BR)
+    params = {"x": jnp.zeros((40,))}
+    batches = {"target": jnp.ones((3, 40))}
+    rng = jax.random.key(9)
+    delta, res = fedzo.client_delta(_quad_loss, params, batches, rng, cfg)
+    msg = seedcomm.compress(rng, res.coeffs, cfg)
+    recon = seedcomm.reconstruct_delta(msg, params, cfg)
+    np.testing.assert_allclose(np.asarray(delta["x"]),
+                               np.asarray(recon["x"]), atol=1e-7)
+
+
+@pytest.mark.parametrize("flat", [False, True])
+def test_channel_schedule_reports_m_effective(flat):
+    """cfg.channel_schedule end to end: the round draws a Rayleigh mask,
+    reports m_effective ≤ M, and stays finite (both round engines)."""
+    cfg = FedZOConfig(local_iters=2, lr=0.05, mu=1e-3, b2=4,
+                      aircomp=True, snr_db=20.0, channel_schedule=True,
+                      flat_params=flat, flat_block_rows=BR if flat else 0)
+    params = {"x": jnp.zeros((64,))}
+    batches = {"target": jnp.ones((6, 2, 64))}
+    rngs = jax.random.split(jax.random.key(0), 6)
+    p, m = fedzo.round_simulated(_quad_loss, params, batches, rngs, cfg,
+                                 channel_rng=jax.random.key(5))
+    assert 0.0 <= float(m["m_effective"]) <= 6.0
+    assert jnp.all(jnp.isfinite(p["x"]))
+
+
+def test_channel_schedule_through_fedserver():
+    """FedServer wires channel-truncation scheduling into its jitted round
+    and surfaces m_effective in the per-round metrics."""
+    x, y = make_classification(400, 32, 4, seed=0)
+    clients = noniid_shards(x, y, 8)
+    cfg = FedZOConfig(n_devices=8, n_participating=6, local_iters=2,
+                      lr=1e-3, mu=1e-3, b1=8, b2=4, aircomp=True,
+                      snr_db=20.0, channel_schedule=True, seed=3)
+    srv = FedServer(softmax_loss, softmax_init(None, n_features=32, n_classes=4), clients, cfg)
+    hist = srv.run(2)
+    for m in hist:
+        assert 0.0 <= m["m_effective"] <= 6.0
+        assert np.isfinite(m["mean_local_loss"])
+
+
+def test_server_momentum_threaded_through_fedserver():
+    """Regression for the dropped-momentum bug: FedServer used to ignore
+    cfg.server_momentum entirely, so a momentum run was bit-identical to a
+    momentum-free run. The two must diverge."""
+    x, y = make_classification(400, 32, 4, seed=1)
+    clients = noniid_shards(x, y, 8)
+
+    def run(mom):
+        cfg = FedZOConfig(n_devices=8, n_participating=4, local_iters=2,
+                          lr=1e-3, mu=1e-3, b1=8, b2=4,
+                          server_momentum=mom, seed=7)
+        srv = FedServer(softmax_loss, softmax_init(None, n_features=32, n_classes=4),
+                        clients, cfg)
+        srv.run(3)
+        return srv.params
+
+    p0, p1 = run(0.0), run(0.9)
+    diff = float(tree_norm(tree_sub(p0, p1)))
+    assert diff > 1e-6, diff  # momentum must actually change the trajectory
+
+
+def test_wire_and_dense_bytes_exact():
+    """Byte accounting is dtype-/size-exact: wire_bytes equals the actual
+    nbytes of the message arrays (8 B threefry key, not 16) and
+    run_seed_compressed_round's dense_bytes honors leaf dtypes."""
+    cfg = FedZOConfig(local_iters=3, lr=0.01, mu=1e-2, b2=4)
+    params = {"w": jnp.zeros((10,), jnp.float32),
+              "b": jnp.zeros((4,), jnp.bfloat16)}
+
+    def loss(p, batch):
+        return (0.5 * jnp.sum((p["w"] - batch["target"][..., :10]) ** 2)
+                + 0.5 * jnp.sum(p["b"].astype(jnp.float32) ** 2))
+
+    batches = [{"target": jnp.ones((3, 16))} for _ in range(2)]
+    rngs = list(jax.random.split(jax.random.key(0), 2))
+    _, wire, dense = run_seed_compressed_round(loss, params, batches, rngs,
+                                               cfg)
+    msg = seedcomm.compress(rngs[0], jnp.zeros((3, 4), jnp.float32), cfg)
+    expect_one = (np.asarray(msg["key"]).nbytes + msg["coeffs"].nbytes
+                  + np.asarray(msg["lr"]).nbytes)
+    assert seedcomm.wire_bytes(msg) == expect_one == 8 + 3 * 4 * 4 + 4
+    assert wire == 2 * expect_one
+    # bf16 leaf costs 2 B/param — the old `size * 4` formula overcounted
+    assert dense == 2 * tree_bytes(params) == 2 * (10 * 4 + 4 * 2)
+
+
+def test_batched_aggregate_matches_per_message():
+    """seedcomm.aggregate (one batched scan over [M·H, b2]) equals the mean
+    of per-message reconstructions on both round engines."""
+    params = {"x": jnp.zeros((40,))}
+    for cfg in (FedZOConfig(local_iters=2, lr=0.02, mu=1e-3, b2=5),
+                FedZOConfig(local_iters=2, lr=0.02, mu=1e-3, b2=5,
+                            flat_params=True, flat_block_rows=BR)):
+        msgs = []
+        for i in range(3):
+            rng = jax.random.key(50 + i)
+            batches = {"target": (i + 1.0) * jnp.ones((2, 40))}
+            _, res = fedzo.client_delta(_quad_loss, params, batches, rng, cfg)
+            msgs.append(seedcomm.compress(rng, res.coeffs, cfg))
+        agg = seedcomm.aggregate(msgs, params, cfg)
+        ref = None
+        for m in msgs:
+            r = seedcomm.reconstruct_delta(m, params, cfg)
+            ref = r if ref is None else jax.tree.map(jnp.add, ref, r)
+        ref = jax.tree.map(lambda v: v / 3.0, ref)
+        np.testing.assert_allclose(np.asarray(agg["x"]),
+                                   np.asarray(ref["x"]), atol=1e-6)
 
 
 @pytest.mark.slow

@@ -137,6 +137,7 @@ def test_seedcomm_wire_format_preserved_on_flat_path():
 # -- 3. trajectory equivalence on softmax regression ------------------------
 
 
+@pytest.mark.slow
 def test_flat_trajectory_matches_pytree_over_20_iterates():
     """Acceptance: the flat fused path's loss trajectory matches the pytree
     path (conv="counter", same directions) within fp32 tolerance over ≥ 20
@@ -170,6 +171,36 @@ def test_flat_trajectory_matches_pytree_over_20_iterates():
     # final parameters agree too (looser: 22 compounded 1/μ amplifications)
     for a, b in zip(jax.tree.leaves(p_f), jax.tree.leaves(p_t)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+
+
+def test_pod_step_computes_dirnorms_once(monkeypatch):
+    """Regression: the pod-step flat path used to call flat_coefficients
+    and flat_apply_coefficients without a shared ``inv``, running the
+    zo_dirnorms kernel twice per step (the invariant flat_local_iterate
+    documents). The step must compute the inv-norms exactly once."""
+    calls = []
+    orig = estimator.flat_inv_norms
+
+    def counting(*a, **k):
+        calls.append(1)
+        return orig(*a, **k)
+
+    monkeypatch.setattr(estimator, "flat_inv_norms", counting)
+    cfg = FedZOConfig(b2=4, lr=0.05, mu=1e-3, flat_params=True,
+                      flat_block_rows=BR)
+    params = {"x": jnp.zeros((40,))}
+
+    def loss_grouped(p, b):
+        l = 0.5 * jnp.sum((p["x"] - b["target"]) ** 2)
+        return jnp.stack([l, l * 1.01])
+
+    class FakeMesh:
+        shape = {"pod": 2}
+
+    step = fedzo.make_pod_round_step(loss_grouped, cfg, FakeMesh())
+    newp, _ = step(params, {"target": jnp.ones((40,))}, jax.random.key(0))
+    assert jnp.all(jnp.isfinite(newp["x"]))
+    assert len(calls) == 1, f"flat_inv_norms ran {len(calls)}× (want 1)"
 
 
 def test_flat_local_phase_and_pod_step_run():
