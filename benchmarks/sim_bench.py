@@ -1,0 +1,148 @@
+"""Host-loop vs in-jit federation engine (DESIGN.md §9) on the quickstart
+softmax-regression experiment (N=50, M=10, H=5, b1=25, b2=20, d=7850).
+
+Rows:
+
+- ``sim/host_loop_us_per_round``   — the per-round Python ``FedServer.run``
+  loop as it ships (numpy sampling, host batch stacking, one jit entry per
+  round, per-round metric sync), measured over SIM_BENCH_ROUNDS rounds.
+- ``sim/engine_us_per_round``      — the same experiment as ONE compiled
+  scan (``sim.run_experiment`` under ``sim.fast_sim_config``: in-jit
+  store sampling, batched-direction local phases, donated carry), steady
+  state (compile excluded).
+- ``sim/engine_loop_est_us_per_round`` — the engine scanning the UNCHANGED
+  loop-estimator round: isolates the structural scan/store gain from the
+  batched-direction gain (measured over fewer rounds; per-round metric).
+- ``sim/engine_speedup_x``         — host loop / fast engine (the ≥5×
+  acceptance row).
+- ``sim/sharded_dev{n}_us_per_round`` — the clients-axis shard_map round
+  inside the engine on a forced n-device host platform (subprocess), n ∈
+  {1, 2}: the device-scaling story at laptop scale.
+
+CPU numbers are regression trackers, not TPU projections (§6).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import numpy as np
+
+ROUNDS = int(os.environ.get("SIM_BENCH_ROUNDS", "50"))
+
+
+def _quickstart_setup():
+    import jax.numpy as jnp
+    from repro.configs.base import FedZOConfig
+    from repro.data.synthetic import make_classification, noniid_shards
+
+    x, y = make_classification(7000, 784, 10, seed=0)
+    clients = noniid_shards(x[:6000], y[:6000], 50)
+    cfg = FedZOConfig(n_devices=50, n_participating=10, local_iters=5,
+                      lr=1e-3, mu=1e-3, b1=25, b2=20)
+    del jnp
+    return clients, cfg
+
+
+def _sharded_subprocess_row(n_dev: int):
+    """Time the sharded engine round on a forced n-device host platform.
+    XLA flags must be set before jax init, so this runs out-of-process."""
+    code = f"""
+import time
+import jax
+from repro import sim
+from repro.configs.base import FedZOConfig
+from repro.data.synthetic import make_classification, noniid_shards
+from repro.models.simple import softmax_init, softmax_loss
+
+x, y = make_classification(7000, 784, 10, seed=0)
+clients = noniid_shards(x[:6000], y[:6000], 50)
+cfg = sim.fast_sim_config(FedZOConfig(n_devices=50, n_participating=10,
+                                      local_iters=5, lr=1e-3, mu=1e-3,
+                                      b1=25, b2=20))
+store = sim.build_store(clients)
+mesh = sim.make_clients_mesh()
+rf = sim.make_sharded_round(softmax_loss, cfg, mesh)
+R = 10
+fn = sim.make_experiment_fn(softmax_loss, cfg, R, round_fn=rf, donate=False)
+key = sim.experiment_key(cfg)
+p = softmax_init(None)
+out = fn(p, None, key, store)
+jax.block_until_ready(out[0])
+t0 = time.perf_counter()
+out = fn(p, None, key, store)
+jax.block_until_ready(out[0])
+print("US_PER_ROUND", (time.perf_counter() - t0) / R * 1e6)
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={n_dev}")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src"),
+         env.get("PYTHONPATH", "")])
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=1200, env=env)
+    if res.returncode != 0:
+        raise RuntimeError(f"sharded bench (n_dev={n_dev}) failed:\n"
+                           f"{res.stderr[-2000:]}")
+    for line in res.stdout.splitlines():
+        if line.startswith("US_PER_ROUND"):
+            return float(line.split()[1])
+    raise RuntimeError("sharded bench printed no timing")
+
+
+def run():
+    from repro import sim
+    from repro.fed.server import FedServer
+    from repro.models.simple import softmax_init, softmax_loss
+
+    rows = []
+    clients, cfg = _quickstart_setup()
+
+    # -- host loop (the reference FedServer.run python path) ------------------
+    srv = FedServer(softmax_loss, softmax_init(None), clients, cfg)
+    srv.run_round(0)                                  # compile
+    t0 = time.perf_counter()
+    srv.run(ROUNDS, driver="host")
+    host_us = (time.perf_counter() - t0) / ROUNDS * 1e6
+    rows.append(("sim/host_loop_us_per_round", host_us, ROUNDS))
+
+    # -- in-jit engine, fast execution plan -----------------------------------
+    store = sim.build_store(clients)
+    fcfg = sim.fast_sim_config(cfg)
+    fn = sim.make_experiment_fn(softmax_loss, fcfg, ROUNDS, donate=False)
+    key = sim.experiment_key(fcfg)
+    p0 = softmax_init(None)
+    out = fn(p0, None, key, store)                    # compile
+    jax.block_until_ready(out[0])
+    t0 = time.perf_counter()
+    out = fn(p0, None, key, store)
+    jax.block_until_ready(out[0])
+    eng_us = (time.perf_counter() - t0) / ROUNDS * 1e6
+    rows.append(("sim/engine_us_per_round", eng_us, ROUNDS))
+    rows.append(("sim/engine_speedup_x", 0.0, host_us / eng_us))
+
+    # -- engine scanning the UNCHANGED loop-estimator round -------------------
+    r_loop = max(2, ROUNDS // 10)
+    fn2 = sim.make_experiment_fn(softmax_loss, cfg, r_loop, donate=False)
+    out = fn2(p0, None, sim.experiment_key(cfg), store)
+    jax.block_until_ready(out[0])
+    t0 = time.perf_counter()
+    out = fn2(p0, None, sim.experiment_key(cfg), store)
+    jax.block_until_ready(out[0])
+    rows.append(("sim/engine_loop_est_us_per_round",
+                 (time.perf_counter() - t0) / r_loop * 1e6, r_loop))
+
+    # -- device scaling of the sharded round ----------------------------------
+    dev_counts = [1] + ([2] if (os.cpu_count() or 1) >= 2 else [])
+    for n_dev in dev_counts:
+        try:
+            us = _sharded_subprocess_row(n_dev)
+            rows.append((f"sim/sharded_dev{n_dev}_us_per_round", us, n_dev))
+        except Exception as e:  # noqa: BLE001 — report, don't sink the suite
+            rows.append((f"sim/sharded_dev{n_dev}_ERROR", 0.0, repr(e)[:60]))
+    return rows

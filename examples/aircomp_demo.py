@@ -1,9 +1,9 @@
 """AirComp over-the-air aggregation demo (paper Sec IV): explicit complex
 channel simulation vs the Eq. 17 closed form, FedZO training through the
-noisy channel at several SNRs, and channel-truncation scheduling
-(Sec. IV-A) end to end — per-round Rayleigh draws mask out clients with
-|h| < h_min, and the round reports how many actually transmitted
-(m_effective).
+noisy channel at several SNRs — the whole SNR curve family as ONE vmapped
+jit (repro.sim.sweep) — and channel-truncation scheduling (Sec. IV-A) end
+to end: per-round Rayleigh draws mask out clients with |h| < h_min, and the
+round reports how many actually transmitted (m_effective).
 
     PYTHONPATH=src python examples/aircomp_demo.py
 """
@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sim
 from repro.configs.base import FedZOConfig
 from repro.core.aircomp import aircomp_simulate_channel, schedule_by_channel
 from repro.data.synthetic import make_classification, noniid_shards
@@ -28,31 +29,42 @@ h, mask = schedule_by_channel(jax.random.key(1), 1000, 0.8)
 print(f"channel-threshold scheduling keeps {float(mask.mean()):.2%} "
       f"of devices (theory: {np.exp(-0.64):.2%})")
 
-# 2. end-to-end: FedZO through the noisy channel
+# 2. end-to-end: FedZO through the noisy channel. The SNR sweep runs as a
+# single jitted, vmapped program — every scenario shares one compile, the
+# per-scenario channel noise rides the stacked config axis (sim/sweep.py).
 x, yl = make_classification(5000, 784, 10, seed=0)
 clients = noniid_shards(x[:4000], yl[:4000], 50)
 test = {"x": jnp.asarray(x[4000:]), "y": jnp.asarray(yl[4000:])}
+store = sim.build_store(clients)
+p0 = softmax_init(None)
 ev = jax.jit(lambda p: softmax_accuracy(p, test))
-for snr in (None, 0.0, -5.0):
-    cfg = FedZOConfig(n_devices=50, n_participating=20, local_iters=5,
-                      lr=1e-3, mu=1e-3, b1=25, b2=20,
-                      aircomp=snr is not None,
-                      snr_db=snr if snr is not None else 0.0, h_min=0.8)
-    srv = FedServer(softmax_loss, softmax_init(None), clients, cfg)
-    srv.run(15)
-    tag = "noise-free" if snr is None else f"{snr:+.0f} dB"
-    print(f"SNR {tag:>10}: test acc {float(ev(srv.params)):.3f}")
+
+base = sim.fast_sim_config(
+    FedZOConfig(n_devices=50, n_participating=20, local_iters=5,
+                lr=1e-3, mu=1e-3, b1=25, b2=20, aircomp=True, h_min=0.8))
+recs = sim.run_sweep(softmax_loss, p0, store, base,
+                     sim.scenario_grid(snr_db=(0.0, -5.0)), 15,
+                     eval_fn=lambda p: {"acc": softmax_accuracy(p, test)},
+                     eval_every=14)
+noise_free = sim.run_experiment(
+    softmax_loss, p0, store, sim.fast_sim_config(
+        FedZOConfig(n_devices=50, n_participating=20, local_iters=5,
+                    lr=1e-3, mu=1e-3, b1=25, b2=20)), 15, donate=False)
+print(f"SNR noise-free: test acc {float(ev(noise_free.params)):.3f}")
+for rec in recs:
+    print(f"SNR {rec['scenario']['snr_db']:+5.0f} dB: "
+          f"test acc {float(rec['evals']['acc'][-1]):.3f}")
 
 # 3. channel-truncation scheduling end to end: of the M sampled clients,
 # only those with |h_i| >= h_min transmit each round (mask applied to both
-# the mean and Δ_max); the flat round engine aggregates the [M, n_pad]
-# delta matrix with the fused one-pass kernel. Reduced scale: interpret-
-# mode Pallas on CPU makes the flat engine a correctness demo here, the
-# compiled TPU path is the perf target (DESIGN.md §8).
+# the mean and Δ_max); the engine runs all 8 rounds in one scan and the
+# fused one-pass kernel aggregates the [M, n_pad] delta matrix. Reduced
+# scale: interpret-mode Pallas on CPU makes this a correctness demo, the
+# compiled TPU path is the perf target (DESIGN.md §8-9).
 cfg = FedZOConfig(n_devices=50, n_participating=10, local_iters=5,
                   lr=1e-3, mu=1e-3, b1=25, b2=10, aircomp=True, snr_db=0.0,
                   h_min=0.8, channel_schedule=True, flat_params=True)
-srv = FedServer(softmax_loss, softmax_init(None), clients, cfg)
+srv = FedServer(softmax_loss, softmax_init(None), clients, cfg, store=store)
 hist = srv.run(8)
 m_eff = [m["m_effective"] for m in hist]
 print(f"channel-truncated AirComp: test acc {float(ev(srv.params)):.3f}, "

@@ -148,7 +148,20 @@ class FedZOConfig:
     # direction convention for the *pytree* path: "tree" (per-leaf threefry,
     # the original) or "counter" (the flat path's convention — used to prove
     # old-vs-new trajectory equivalence). The flat path is always "counter".
+    # The batched-direction (wide) path additionally accepts "block": one
+    # PRNG call per iterate for the whole [b2, n_pad] direction block.
     direction_conv: str = "tree"
+    # batched-direction ("wide") local phase for the simulation engine
+    # (repro.sim, DESIGN.md §9): materialize each iterate's b2 directions as
+    # ONE [b2, n_pad] block, run the b2 perturbed forwards as one vmap, and
+    # apply the update as one matvec. Statistically identical to the loop
+    # estimator; bit-identical directions when direction_conv="tree".
+    batch_directions: bool = False
+    # PRNG implementation for the simulation engine's key chain
+    # (threefry2x32 | rbg | unsafe_rbg). threefry is the default everywhere;
+    # rbg/unsafe_rbg trade threefry's splittability guarantees for ~2-4x
+    # faster in-scan direction generation (simulation-scale only).
+    prng_impl: str = "threefry2x32"
     flat_block_rows: int = 0   # kernel grid rows per block; 0 = default (512)
     server_momentum: float = 0.0  # FedOpt-style momentum on aggregated deltas
     seed: int = 0

@@ -278,6 +278,56 @@ def flat_apply_coefficients(buf, spec: FlatSpec, rng, coeffs, *, scale=1.0,
                           block_rows=block_rows)
 
 
+def direction_block(rng, spec: FlatSpec, b2, *, kind="sphere", conv="block",
+                    like=None, dtype=jnp.float32):
+    """All b2 directions of one iterate as ONE [b2, n_pad] block, plus the
+    [b2] per-direction scale factors (1/‖g_n‖ for sphere, ones otherwise).
+
+    The batched-direction ("wide") estimator of the simulation engine
+    (DESIGN.md §9). Two conventions:
+
+    - conv="block": one PRNG call for the whole block — the fast path. The
+      pad columns may carry generator residue; norms are taken over the
+      valid [:, :spec.d] region only and pad residue in downstream updates
+      is invisible to ``unflatten``.
+    - conv="tree": per-direction per-leaf fold_in keys, bit-identical to
+      ``sample_direction(fold_in(rng, n), ...)`` — the loop estimator's
+      directions, used to prove wide-vs-loop trajectory equivalence.
+      Requires ``like`` (a params pytree matching ``spec``).
+    """
+    if kind == "coordinate":
+        raise ValueError("batched-direction path does not support "
+                         "kind='coordinate'")
+    if conv == "tree":
+        if like is None:
+            raise ValueError("conv='tree' direction blocks need the params "
+                             "pytree (like=...) for per-leaf key derivation")
+        from repro.utils.flatparams import flatten
+
+        def one(k):
+            if kind == "rademacher":
+                g = sample_direction(k, like, kind, dtype)
+            else:
+                g = normal_like_tree(k, like, dtype=dtype)
+            return flatten(g, spec)
+
+        keys = jax.vmap(lambda n: jax.random.fold_in(rng, n))(jnp.arange(b2))
+        V = jax.vmap(one)(keys)                              # [b2, n_pad]
+    elif conv == "block":
+        if kind == "rademacher":
+            V = jax.random.rademacher(rng, (b2, spec.n_pad), dtype)
+        else:
+            V = jax.random.normal(rng, (b2, spec.n_pad), dtype)
+    else:
+        raise ValueError(f"unknown direction block conv {conv!r}")
+    if kind == "sphere":
+        inv = 1.0 / (jnp.linalg.norm(
+            V[:, :spec.d].astype(jnp.float32), axis=1) + 1e-30)
+    else:
+        inv = jnp.ones((b2,), jnp.float32)
+    return V, inv
+
+
 def estimate(loss_fn, params, batch, rng, *, mu, b2, kind="sphere"):
     """Materialized gradient-estimate pytree (Eq. 2). Two tree passes per
     direction; used at paper scale and by tests/property checks."""

@@ -21,6 +21,12 @@ path (DESIGN.md §7): the pytree is flattened ONCE per phase into a padded
 1-D buffer, every perturb is a fused zo_walk transition (one HBM pass per
 direction, directions regenerated in-kernel), and the b2-direction update
 is a single zo_replay pass. The pytree path stays as the reference.
+
+With ``cfg.batch_directions=True`` the local phase runs the batched-
+direction ("wide") plan of the simulation engine (DESIGN.md §9): per
+iterate ONE [b2, n_pad] direction block, the b2 perturbed forwards as one
+vmap, the update as one matvec. Same estimator statistics; bit-identical
+directions to the loop path under direction_conv="tree".
 """
 from __future__ import annotations
 
@@ -33,7 +39,8 @@ from repro.configs.base import FedZOConfig
 from repro.core import estimator
 from repro.core.aircomp import (aircomp_aggregate, aircomp_aggregate_flat,
                                 mask_stats, schedule_by_channel)
-from repro.utils.flatparams import flat_geometry, flatten, unflatten
+from repro.utils.flatparams import (flat_geometry, flat_spec, flatten,
+                                    unflatten)
 from repro.utils.tree import tree_add, tree_scale, tree_sub
 
 
@@ -46,6 +53,22 @@ class LocalResult(NamedTuple):
 def _flat_setup(params, cfg: FedZOConfig):
     """(spec, block_rows kwarg) for the cfg's flat-buffer geometry."""
     return flat_geometry(params, cfg.flat_block_rows)
+
+
+def _wide_setup(params, cfg: FedZOConfig):
+    """Flat geometry for the batched-direction (wide) path.
+
+    The wide phase never enters a Pallas kernel, so it pads only to the
+    vector-lane width — NOT to the kernel block (BLOCK_ROWS·LANES can be
+    8× the model size at softmax-regression scale, and every [b2, n_pad]
+    direction block would pay for the dead columns). The kernel geometry
+    is kept only when the fused AirComp kernel consumes the delta matrix.
+    """
+    from repro.kernels.zo_axpy import LANES
+
+    if cfg.aircomp:
+        return _flat_setup(params, cfg)
+    return flat_spec(params, block=LANES), (cfg.flat_block_rows or None)
 
 
 def flat_local_iterate(loss_fn, buf, spec, batch, rng, cfg: FedZOConfig,
@@ -107,6 +130,38 @@ def _flat_phase_scan(loss_fn, buf0, spec, br, keys, batches, cfg):
     return buf, coeffs, losses
 
 
+def _wide_phase_scan(loss_fn, buf0, spec, keys, batches, cfg, like=None):
+    """Scan H batched-direction ("wide") iterates over a flat buffer — the
+    simulation engine's local phase (DESIGN.md §9). Per step: ONE direction
+    block [b2, n_pad], the b2 perturbed forwards as one vmap (XLA batches
+    them), and the update as one matvec. Statistically identical to the
+    loop estimator; walks its exact directions when direction_conv="tree".
+    Returns (final buf, coeffs [H, b2], losses [H])."""
+    mu = jnp.float32(cfg.mu)
+    scale = estimator._scale_factor(spec.d, cfg.estimator)
+    conv = "tree" if cfg.direction_conv == "tree" else "block"
+
+    def step(buf, inp):
+        k, batch = inp
+        V, inv = estimator.direction_block(k, spec, cfg.b2,
+                                           kind=cfg.estimator, conv=conv,
+                                           like=like)
+        base = loss_fn(unflatten(buf, spec), batch)
+        lp = jax.vmap(lambda v, s: loss_fn(
+            unflatten(buf + (mu * s) * v, spec), batch))(V, inv)
+        if cfg.central:
+            lm = jax.vmap(lambda v, s: loss_fn(
+                unflatten(buf - (mu * s) * v, spec), batch))(V, inv)
+            coeffs = scale * (lp - lm).astype(jnp.float32) / (2 * mu)
+        else:
+            coeffs = scale * (lp - base).astype(jnp.float32) / mu
+        buf = buf + (-cfg.lr / cfg.b2) * ((coeffs * inv) @ V)
+        return buf, (coeffs, base)
+
+    buf, (coeffs, losses) = jax.lax.scan(step, buf0, (keys, batches))
+    return buf, coeffs, losses
+
+
 def local_phase(loss_fn, params, batches, rng, cfg: FedZOConfig) -> LocalResult:
     """H local iterates (Algorithm 1 inner loop).
 
@@ -116,6 +171,13 @@ def local_phase(loss_fn, params, batches, rng, cfg: FedZOConfig) -> LocalResult:
     run on the single flat buffer.
     """
     keys = jax.random.split(rng, cfg.local_iters)
+
+    if cfg.batch_directions:
+        spec, _ = _wide_setup(params, cfg)
+        buf, coeffs, losses = _wide_phase_scan(
+            loss_fn, flatten(params, spec), spec, keys, batches, cfg,
+            like=params)
+        return LocalResult(unflatten(buf, spec), coeffs, losses)
 
     if cfg.flat_params:
         spec, br = _flat_setup(params, cfg)
@@ -169,16 +231,24 @@ def round_simulated(loss_fn, server_params, client_batches, client_rngs,
         k_sched, noise_rng = jax.random.split(channel_rng)
         _, mask = schedule_by_channel(k_sched, M, cfg.h_min)
 
-    if cfg.flat_params:
-        spec, br = _flat_setup(server_params, cfg)
+    if cfg.flat_params or cfg.batch_directions:
+        spec, br = (_wide_setup(server_params, cfg) if cfg.batch_directions
+                    else _flat_setup(server_params, cfg))
         buf0 = flatten(server_params, spec)
         keys = jax.vmap(lambda r: jax.random.split(r, cfg.local_iters))(
             client_rngs)
 
-        def one_client(batches, ks):
-            buf, _, base = _flat_phase_scan(loss_fn, buf0, spec, br, ks,
-                                            batches, cfg)
-            return buf - buf0, base
+        if cfg.batch_directions:
+            def one_client(batches, ks):
+                buf, _, base = _wide_phase_scan(loss_fn, buf0, spec, ks,
+                                                batches, cfg,
+                                                like=server_params)
+                return buf - buf0, base
+        else:
+            def one_client(batches, ks):
+                buf, _, base = _flat_phase_scan(loss_fn, buf0, spec, br, ks,
+                                                batches, cfg)
+                return buf - buf0, base
 
         deltas, losses = jax.vmap(one_client)(client_batches, keys)
 

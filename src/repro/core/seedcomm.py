@@ -35,16 +35,55 @@ from repro.utils.flatparams import flat_geometry, unflatten
 from repro.utils.tree import tree_scale, tree_zeros_like
 
 
+def _wire_key_data(rngs):
+    """key_data with the wire contract enforced: the format ships the
+    8-byte threefry key, so rbg-family keys (4 words — what
+    ``sim.fast_sim_config`` installs for the engine's in-scan streams)
+    must be rejected HERE, not as a shape error deep inside the replay."""
+    kd = jax.random.key_data(rngs)
+    if kd.shape[-1] != 2:
+        raise ValueError(
+            f"seed-compression wire format carries the 8-byte threefry key; "
+            f"got {kd.shape[-1]}-word key data (cfg.prng_impl='rbg'/"
+            f"'unsafe_rbg'?) — use threefry2x32 keys for seed-compressed "
+            f"uplinks")
+    return kd
+
+
+def _check_replayable(cfg: FedZOConfig):
+    """Block-convention coefficients exist only inside the simulation
+    engine: a receiver replaying them through the tree/counter conventions
+    would rebuild uncorrelated directions with no error (the worst kind of
+    wrong), so reject them loudly at the replay boundary."""
+    if cfg.batch_directions and cfg.direction_conv != "tree":
+        raise ValueError(
+            "coefficients from the batched-direction path with "
+            "direction_conv='block' are not seed-replayable — use "
+            "direction_conv='tree' (bit-identical directions) or the flat "
+            "counter path for seed-compressed uplinks")
+
+
 def compress(rng, coeffs, cfg: FedZOConfig):
     """The wire message for one client round: (key, coeffs [H, b2])."""
-    return {"key": jax.random.key_data(rng), "coeffs": coeffs,
+    return {"key": _wire_key_data(rng), "coeffs": coeffs,
             "lr": jnp.float32(cfg.lr)}
 
 
+def compress_stacked(rngs, coeffs, cfg: FedZOConfig):
+    """All M wire messages of a round as ONE stacked bundle — no Python
+    loop: (keys [M, 2], coeffs [M, H, b2], lrs [M]). Byte-identical on the
+    wire to M ``compress`` messages; ``aggregate`` and ``wire_bytes``
+    accept the bundle directly. ``rngs`` is a stacked [M] key array."""
+    return {"key": _wire_key_data(rngs), "coeffs": coeffs,
+            "lr": jnp.full((coeffs.shape[0],), cfg.lr, jnp.float32)}
+
+
 def wire_bytes(msg) -> int:
-    """Exact uplink bytes of one message: key words + coeffs + the lr
-    scalar, all from actual array nbytes (threefry key_data is 2×uint32 =
-    8 B, not the 16 a typed-key pickle would cost)."""
+    """Exact uplink bytes of one message (or of a whole compress_stacked
+    bundle — the stacked arrays' nbytes ARE the per-message total): key
+    words + coeffs + the lr scalar, all from actual array nbytes (threefry
+    key_data is 2×uint32 = 8 B, not the 16 a typed-key pickle would
+    cost)."""
     return int(jnp.asarray(msg["key"]).nbytes + msg["coeffs"].nbytes
                + jnp.asarray(msg["lr"]).nbytes)
 
@@ -56,6 +95,7 @@ def reconstruct_delta(msg, params_like, cfg: FedZOConfig):
     replays it: b2 axpy passes per iterate (pytree) or one zo_replay pass
     per iterate (flat, in-kernel direction regeneration).
     """
+    _check_replayable(cfg)
     rng = jax.random.wrap_key_data(msg["key"])
     H = msg["coeffs"].shape[0]
     keys = jax.random.split(rng, H)
@@ -108,16 +148,23 @@ def _iterate_keys(keys, H):
 def aggregate(msgs, params_like, cfg: FedZOConfig):
     """Mean of M reconstructed deltas as ONE batched seed replay.
 
-    msgs: list of compress() outputs. Instead of M Python-level
-    reconstructions (each tracing its own H-scan), the stacked [M, H, b2]
-    coefficients replay as a single scan over the M·H (key, coeffs [b2])
-    iterate records: the accumulator is one flat buffer (cfg.flat_params)
-    or one delta pytree, and each step is one zo_replay pass / one
-    b2-axpy replay. Trace size is O(1) in M, and the fp32 accumulation
-    order (m-ascending, h-ascending) matches the old loop.
+    msgs: a list of compress() outputs or one compress_stacked() bundle.
+    Instead of M Python-level reconstructions (each tracing its own
+    H-scan), the stacked [M, H, b2] coefficients replay as a single scan
+    over the M·H (key, coeffs [b2]) iterate records: the accumulator is
+    one flat buffer (cfg.flat_params) or one delta pytree, and each step
+    is one zo_replay pass / one b2-axpy replay. Trace size is O(1) in M,
+    and the fp32 accumulation order (m-ascending, h-ascending) matches
+    the old loop.
     """
-    M = len(msgs)
-    keys, coeffs, lrs = stack_messages(msgs)
+    _check_replayable(cfg)
+    if isinstance(msgs, dict):
+        keys = jnp.asarray(msgs["key"], jnp.uint32)
+        coeffs, lrs = msgs["coeffs"], msgs["lr"]
+        M = coeffs.shape[0]
+    else:
+        M = len(msgs)
+        keys, coeffs, lrs = stack_messages(msgs)
     H, b2 = coeffs.shape[1], coeffs.shape[2]
     k_mh = _iterate_keys(keys, H)
     c_mh = coeffs.reshape(M * H, b2)

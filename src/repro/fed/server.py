@@ -1,9 +1,20 @@
 """Federated orchestration: the server loop driving Algorithm 1 end to end.
 
 ``FedServer`` owns the global model, samples M of N clients per round
-(uniform, per the paper), assembles their pre-sampled local batches, and
-calls the jitted round function (FedZO, FedAvg, or a baseline). AirComp and
-seed-compression plug in at the aggregation step.
+(uniform, per the paper), and runs the jitted round function (FedZO,
+FedAvg, or a baseline). AirComp and seed-compression plug in at the
+aggregation step.
+
+Two drivers share the class:
+
+- **Host loop** (the reference): per-round Python — numpy client sampling,
+  host batch stacking, one jit entry per round. Always available.
+- **Sim engine** (repro.sim, DESIGN.md §9): construct with a
+  ``store=ClientStore`` and ``run`` executes ALL rounds as one compiled
+  ``lax.scan`` — participation draws, minibatch sampling, channel
+  realizations, and eval all in-jit, one host sync at the end.
+  ``run_round`` on the store path drives the engine's exact round step
+  from the host, so the two trajectories are bit-identical.
 """
 from __future__ import annotations
 
@@ -24,21 +35,51 @@ from repro.utils.tree import tree_add, tree_bytes, tree_zeros_like
 class FedServer:
     loss_fn: Callable            # loss(params, batch) -> scalar
     params: object               # global model x^t
-    clients: list                # list of {"x": ..., "y": ...} datasets
+    clients: Optional[list]      # list of {"x": ..., "y": ...} datasets
     cfg: FedZOConfig
     algo: str = "fedzo"          # fedzo | fedavg
-    eval_fn: Optional[Callable] = None
+    eval_fn: Optional[Callable] = None   # host-side, may sync (python loop)
     history: list = field(default_factory=list)
+    store: Optional[object] = None       # sim.ClientStore → engine driver
+    jit_eval: Optional[Callable] = None  # jit-traceable, runs in-scan
+    eval_every: int = 1                  # engine eval cadence (rounds)
 
     def __post_init__(self):
+        if self.clients is None and self.store is None:
+            raise ValueError("FedServer needs client datasets: pass "
+                             "clients=[...] and/or store=ClientStore")
+        n = (len(self.clients) if self.clients is not None
+             else self.store.n_clients)
+        if n != self.cfg.n_devices:
+            raise ValueError(
+                f"cfg.n_devices={self.cfg.n_devices} but {n} client "
+                f"datasets were provided — the federation size N must "
+                f"match the config (did you partition with a different "
+                f"n_clients?)")
+        if self.cfg.n_participating > n:
+            raise ValueError(
+                f"cfg.n_participating={self.cfg.n_participating} exceeds "
+                f"the federation size N={n}")
         self._np_rng = np.random.default_rng(self.cfg.seed)
-        self._key = jax.random.key(self.cfg.seed)
         self._momentum = None
+        self._exp_cache = {}
+        # jit once for the host-driven rounds; the scan engine traces the
+        # raw fn in-scan (wrapping there would be a no-op)
+        self._jit_eval = (jax.jit(self.jit_eval)
+                          if self.jit_eval is not None else None)
+        if self.algo == "fedzo" and self.cfg.server_momentum > 0:
+            # momentum state lives on the server and threads through
+            # every round (round_simulated returns the updated state)
+            self._momentum = tree_zeros_like(self.params)
+        if self.store is not None:
+            from repro.sim import engine as sim_engine
+            self._key = sim_engine.experiment_key(self.cfg)
+            self._sim_step = jax.jit(sim_engine.make_round_step(
+                self.loss_fn, self.cfg, algo=self.algo))
+            return
+        self._key = jax.random.key(self.cfg.seed)
         if self.algo == "fedzo":
-            if self.cfg.server_momentum > 0:
-                # momentum state lives on the server and threads through
-                # every round (round_simulated returns the updated state)
-                self._momentum = tree_zeros_like(self.params)
+            if self._momentum is not None:
                 self._round = jax.jit(
                     lambda p, b, r, ch, m: fedzo.round_simulated(
                         self.loss_fn, p, b, r, self.cfg, channel_rng=ch,
@@ -54,11 +95,11 @@ class FedServer:
         else:
             raise ValueError(self.algo)
 
-    # -- client sampling -----------------------------------------------------
+    # -- client sampling (host loop) -----------------------------------------
     def sample_clients(self):
-        n, m = self.cfg.n_devices, self.cfg.n_participating
-        assert len(self.clients) >= n
-        return self._np_rng.choice(n, size=min(m, n), replace=False)
+        n = len(self.clients)
+        return self._np_rng.choice(n, size=min(self.cfg.n_participating, n),
+                                   replace=False)
 
     def _stack_batches(self, chosen):
         per = [sample_local_batches(self.clients[i], self._np_rng,
@@ -68,42 +109,92 @@ class FedServer:
 
     # -- round ---------------------------------------------------------------
     def run_round(self, t: int):
-        chosen = self.sample_clients()
-        batches = self._stack_batches(chosen)
-        self._key, kr, kc = jax.random.split(self._key, 3)
-        if self.algo == "fedzo":
-            rngs = jax.random.split(kr, len(chosen))
-            if self._momentum is not None:
-                self.params, metrics, self._momentum = self._round(
-                    self.params, batches, rngs, kc, self._momentum)
-            else:
-                self.params, metrics = self._round(self.params, batches,
-                                                   rngs, kc)
+        if self.store is not None:
+            state, metrics = self._sim_step(
+                (self.params, self._momentum, self._key), self.store)
+            self.params, self._momentum, self._key = state
         else:
-            self.params, metrics = self._round(self.params, batches, kc)
-        metrics = {k: float(v) for k, v in metrics.items()}
+            chosen = self.sample_clients()
+            batches = self._stack_batches(chosen)
+            self._key, kr, kc = jax.random.split(self._key, 3)
+            if self.algo == "fedzo":
+                rngs = jax.random.split(kr, len(chosen))
+                if self._momentum is not None:
+                    self.params, metrics, self._momentum = self._round(
+                        self.params, batches, rngs, kc, self._momentum)
+                else:
+                    self.params, metrics = self._round(self.params, batches,
+                                                       rngs, kc)
+            else:
+                self.params, metrics = self._round(self.params, batches, kc)
+        # ONE host sync for the whole metrics dict, not one per metric
+        metrics = {k: float(v) for k, v in jax.device_get(metrics).items()}
         metrics["round"] = t
-        if self.eval_fn is not None:
-            metrics.update(self.eval_fn(self.params))
+        ev = self.eval_fn or (
+            self._jit_eval and (lambda p: {
+                k: float(v)
+                for k, v in jax.device_get(self._jit_eval(p)).items()}))
+        if ev:
+            metrics.update(ev(self.params))
         self.history.append(metrics)
         return metrics
 
-    def run(self, rounds: int, log_every: int = 0, log_fn=print):
-        for t in range(rounds):
-            m = self.run_round(t)
-            if log_every and t % log_every == 0:
+    def run(self, rounds: int, log_every: int = 0, log_fn=print,
+            driver: str = "auto"):
+        """Run ``rounds`` rounds. ``driver``: "scan" forces the compiled
+        engine (requires a store; host-side ``eval_fn`` is not usable
+        there — pass ``jit_eval``), "host" forces the per-round Python
+        loop, "auto" picks the engine whenever it can."""
+        use_engine = driver == "scan" or (
+            driver == "auto" and self.store is not None
+            and self.eval_fn is None)
+        def log(i, m):
+            if log_every and i % log_every == 0:
                 log_fn({k: (round(v, 5) if isinstance(v, float) else v)
                         for k, v in m.items()})
+
+        if use_engine:
+            if self.store is None:
+                raise ValueError("driver='scan' needs store=ClientStore")
+            for i, m in enumerate(self._run_scanned(rounds)):
+                log(i, m)
+        else:
+            for i in range(rounds):
+                log(i, self.run_round(len(self.history)))
         return self.history
+
+    def _run_scanned(self, rounds: int):
+        from repro.sim import engine as sim_engine
+        fn = self._exp_cache.get(rounds)
+        if fn is None:
+            # donate=False: the server hands out self.params (history,
+            # eval_fn, user code may hold references) — power users get
+            # in-place donation through sim.run_experiment directly
+            fn = sim_engine.make_experiment_fn(
+                self.loss_fn, self.cfg, rounds, algo=self.algo,
+                eval_fn=self.jit_eval, eval_every=self.eval_every,
+                donate=False)
+            self._exp_cache[rounds] = fn
+        self.params, self._momentum, self._key, ring, ebuf = fn(
+            self.params, self._momentum, self._key, self.store)
+        res = sim_engine.ExperimentResult(
+            params=self.params, momentum=self._momentum, key=self._key,
+            metrics=ring, evals=ebuf, rounds=rounds, ring_size=rounds,
+            eval_rounds=(np.arange(0, rounds, self.eval_every)
+                         if self.jit_eval is not None else np.arange(0)))
+        hist = sim_engine.history(res, start_round=len(self.history))
+        self.history.extend(hist)
+        return hist
 
 
 def run_seed_compressed_round(loss_fn, params, clients_batches, rngs, cfg):
     """Reference digital-uplink round: each client ships (key, coeffs); the
     server replays seeds. The M local phases run as ONE vmapped program
-    over stacked [M, H, ...] batches and the server replay is one batched
-    scan (seedcomm.aggregate). ``clients_batches`` may be a list of
-    per-client batch trees or an already-stacked tree; ``rngs`` a list or a
-    stacked [M] key array. Returns (params', wire_bytes_total,
+    over stacked [M, H, ...] batches, the M wire messages are built as ONE
+    stacked bundle (seedcomm.compress_stacked), and the server replay is
+    one batched scan (seedcomm.aggregate). ``clients_batches`` may be a
+    list of per-client batch trees or an already-stacked tree; ``rngs`` a
+    list or a stacked [M] key array. Returns (params', wire_bytes_total,
     dense_bytes) with both byte counts dtype-exact (actual .nbytes)."""
     if isinstance(clients_batches, (list, tuple)):
         clients_batches = jax.tree.map(lambda *xs: jnp.stack(xs),
@@ -114,8 +205,8 @@ def run_seed_compressed_round(loss_fn, params, clients_batches, rngs, cfg):
         lambda b, r: fedzo.local_phase(loss_fn, params, b, r, cfg))(
         clients_batches, rngs)
     M = res.coeffs.shape[0]
-    msgs = [seedcomm.compress(rngs[i], res.coeffs[i], cfg) for i in range(M)]
+    msgs = seedcomm.compress_stacked(rngs, res.coeffs, cfg)
     delta = seedcomm.aggregate(msgs, params, cfg)
     dense_bytes = tree_bytes(params) * M
-    wire = sum(seedcomm.wire_bytes(m) for m in msgs)
+    wire = seedcomm.wire_bytes(msgs)
     return tree_add(params, delta), wire, dense_bytes

@@ -31,6 +31,20 @@ def make_production_mesh(*, multi_pod: bool = False):
     return _make_mesh(shape, axes)
 
 
+def make_clients_mesh(n_devices: int = 0, *, axis: str = "clients"):
+    """1-D mesh over the local devices with the federated ``clients`` axis —
+    the simulation engine's fan-out mesh (repro.sim.shard): the M sampled
+    clients of each round split over this axis, one shard of local phases
+    and one partial aggregation reduce per device."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    if n_devices:
+        devs = devs[:n_devices]
+    return Mesh(np.array(devs), (axis,))
+
+
 def make_host_mesh(model_axis: int = 1):
     """Small mesh over whatever devices exist (tests / CPU smoke)."""
     n = len(jax.devices())

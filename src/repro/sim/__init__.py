@@ -1,0 +1,32 @@
+"""repro.sim — the fully-jitted federation simulation engine (DESIGN.md §9).
+
+- ``store``  — device-resident ClientStore with in-jit participation and
+  minibatch sampling.
+- ``engine`` — one compiled lax.scan over R communication rounds (metrics
+  ring buffer, in-scan eval, donated carry).
+- ``shard``  — the round fanned out over a ``clients`` mesh axis.
+- ``sweep``  — vmapped scenario grids (one jit per static shape group).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import FedZOConfig
+from repro.sim.engine import (ExperimentResult, experiment_key,
+                              history, make_experiment_fn, make_round_step,
+                              run_experiment)
+from repro.sim.shard import make_clients_mesh, make_sharded_round
+from repro.sim.store import (ClientStore, build_store, sample_batches,
+                             sample_participants)
+from repro.sim.sweep import run_sweep, scenario_grid
+
+
+def fast_sim_config(cfg: FedZOConfig) -> FedZOConfig:
+    """The engine's fast execution strategy for a given experiment config:
+    batched-direction local phases (one [b2, n_pad] block + one vmapped
+    forward batch per iterate) and the rbg bit generator for the in-scan
+    direction streams. Same algorithm and distributions — only the
+    execution plan and PRNG stream layout change."""
+    return dataclasses.replace(cfg, batch_directions=True,
+                               direction_conv="block",
+                               prng_impl="unsafe_rbg")

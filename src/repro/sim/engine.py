@@ -1,0 +1,230 @@
+"""Fully-jitted multi-round federation engine (DESIGN.md §9).
+
+One compiled program runs an ENTIRE experiment: ``lax.scan`` over R
+communication rounds, each round drawing its participants and minibatches
+from the device-resident ``ClientStore`` (sim/store.py), running the
+existing simulated round (``fedzo.round_simulated`` /
+``fedavg.round_simulated`` — momentum and channel scheduling threaded
+through the carry), and writing its scalar metrics into a fixed-shape ring
+buffer. Evaluation runs in-scan every k rounds behind a ``lax.cond``. The
+host syncs exactly once, after all R rounds.
+
+Key-chain protocol (shared with ``FedServer.run_round`` on the store path,
+so R in-jit rounds bit-match R host-driven rounds):
+
+    key, k_part, k_batch, k_zo, k_chan = split(key, 5)      # per round
+
+``k_part`` draws the M-of-N participation permutation, ``k_batch`` the
+local minibatches, ``k_zo`` the M per-client ZO keys, ``k_chan`` the
+channel realization. The chain starts at ``key(cfg.seed, impl=
+cfg.prng_impl)`` so a whole experiment is bit-reproducible from the config.
+
+Donation: the jitted program donates params, momentum, and the key, so at
+steady state the engine updates the model in place — no per-round
+host↔device traffic and no double-buffered parameter copies.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedZOConfig
+from repro.core import fedavg, fedzo
+from repro.sim.store import ClientStore, sample_batches, sample_participants
+from repro.utils.tree import tree_zeros_like
+
+
+def round_keys(key):
+    """(next_carry_key, k_participation, k_batches, k_zo, k_channel)."""
+    ks = jax.random.split(key, 5)
+    return ks[0], ks[1], ks[2], ks[3], ks[4]
+
+
+def experiment_key(cfg: FedZOConfig):
+    """Round-0 carry key of an experiment: the one derivation both the
+    engine and the FedServer store path start from."""
+    return jax.random.key(cfg.seed, impl=cfg.prng_impl)
+
+
+def make_round_step(loss_fn, cfg: FedZOConfig, *, algo: str = "fedzo",
+                    round_fn=None) -> Callable:
+    """One full communication round as a pure function
+    ``step((params, momentum, key), store) -> ((params', momentum', key'),
+    metrics)``.
+
+    THE round unit shared by the scan engine and by
+    ``FedServer.run_round`` on the store path — sharing it is what makes
+    the two trajectories bit-identical. ``round_fn`` optionally replaces
+    ``fedzo.round_simulated`` with a signature-compatible deployment (the
+    clients-axis shard_map round of sim/shard.py).
+    """
+    has_momentum = algo == "fedzo" and _static_positive(cfg.server_momentum)
+    fz_round = round_fn if round_fn is not None else fedzo.round_simulated
+
+    def step(state, store: ClientStore):
+        params, momentum, key = state
+        key, k_part, k_batch, k_zo, k_chan = round_keys(key)
+        idx = sample_participants(k_part, store.n_clients,
+                                  cfg.n_participating)
+        batches = sample_batches(store, idx, k_batch, cfg.local_iters,
+                                 cfg.b1)
+        if algo == "fedavg":
+            params, metrics = fedavg.round_simulated(
+                loss_fn, params, batches, cfg, channel_rng=k_chan)
+        else:
+            rngs = jax.random.split(k_zo, cfg.n_participating)
+            if has_momentum:
+                params, metrics, momentum = fz_round(
+                    loss_fn, params, batches, rngs, cfg, channel_rng=k_chan,
+                    momentum=momentum)
+            else:
+                params, metrics = fz_round(
+                    loss_fn, params, batches, rngs, cfg, channel_rng=k_chan)
+        return (params, momentum, key), metrics
+
+    return step
+
+
+def _static_positive(x) -> bool:
+    """cfg fields compared against 0 at trace time must be static — a
+    sweep-vmapped (traced) value here would silently change the program
+    structure, so reject it loudly."""
+    if isinstance(x, jax.core.Tracer):
+        raise ValueError("server_momentum selects the carry structure and "
+                         "cannot be swept/vmapped — keep it static")
+    return x > 0
+
+
+@dataclass
+class ExperimentResult:
+    """Host-side container for one engine run. ``metrics`` holds the ring
+    buffer (dict of [ring_size] arrays, slot = round % ring_size);
+    ``evals`` the in-scan eval outputs (dict of [n_evals] arrays), one slot
+    per eval round in ``eval_rounds``."""
+    params: Any
+    momentum: Any
+    key: Any
+    metrics: dict
+    evals: dict
+    rounds: int
+    ring_size: int
+    eval_rounds: np.ndarray
+
+    def recorded_rounds(self) -> np.ndarray:
+        """Round numbers still present in the ring, oldest→newest."""
+        start = max(0, self.rounds - self.ring_size)
+        return np.arange(start, self.rounds)
+
+
+def experiment_core(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
+                    rounds: int, key, momentum=None, *, algo: str = "fedzo",
+                    eval_fn=None, eval_every: int = 0, ring_size: int = 0,
+                    round_fn=None):
+    """The traceable experiment body: scan ``rounds`` round steps, ring-
+    buffer the metrics, eval in-scan every ``eval_every`` rounds. Returns
+    (params, momentum, key, metrics_ring, evals). Un-jitted so sweeps can
+    vmap it over a stacked config axis (sim/sweep.py)."""
+    ring_size = min(rounds, ring_size) if ring_size else rounds
+    step = make_round_step(loss_fn, cfg, algo=algo, round_fn=round_fn)
+    do_eval = eval_fn is not None and eval_every > 0
+    n_evals = (rounds + eval_every - 1) // eval_every if do_eval else 0
+
+    state0 = (params, momentum, key)
+    m_shapes = jax.eval_shape(lambda s: step(s, store)[1], state0)
+    ring0 = {k: jnp.zeros((ring_size,), v.dtype)
+             for k, v in m_shapes.items()}
+    if do_eval:
+        e_shapes = jax.eval_shape(eval_fn, params)
+        ebuf0 = {k: jnp.zeros((n_evals,), v.dtype)
+                 for k, v in e_shapes.items()}
+    else:
+        ebuf0 = {}
+
+    def body(carry, t):
+        state, ring, ebuf = carry
+        state, metrics = step(state, store)
+        slot = jnp.mod(t, ring_size)
+        ring = {k: ring[k].at[slot].set(metrics[k].astype(ring[k].dtype))
+                for k in ring}
+        if do_eval:
+            def run_eval(args):
+                buf, p = args
+                vals = eval_fn(p)
+                return {k: buf[k].at[t // eval_every].set(
+                    vals[k].astype(buf[k].dtype)) for k in buf}
+
+            ebuf = jax.lax.cond(jnp.mod(t, eval_every) == 0, run_eval,
+                                lambda args: args[0], (ebuf, state[0]))
+        return (state, ring, ebuf), None
+
+    (state, ring, ebuf), _ = jax.lax.scan(
+        body, (state0, ring0, ebuf0), jnp.arange(rounds))
+    params, momentum, key = state
+    return params, momentum, key, ring, ebuf
+
+
+def make_experiment_fn(loss_fn, cfg: FedZOConfig, rounds: int, *,
+                       algo: str = "fedzo", eval_fn=None, eval_every: int = 0,
+                       ring_size: int = 0, round_fn=None,
+                       donate: bool = True) -> Callable:
+    """Compile the whole experiment once: returns a jitted
+    ``fn(params, momentum, key, store) -> (params', momentum', key',
+    metrics_ring, evals)`` with params/momentum/key donated (pass
+    ``momentum=None`` when cfg.server_momentum is 0)."""
+    def fn(params, momentum, key, store):
+        return experiment_core(loss_fn, params, store, cfg, rounds, key,
+                               momentum, algo=algo, eval_fn=eval_fn,
+                               eval_every=eval_every, ring_size=ring_size,
+                               round_fn=round_fn)
+
+    return jax.jit(fn, donate_argnums=(0, 1, 2) if donate else ())
+
+
+def run_experiment(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
+                   rounds: int, *, algo: str = "fedzo", eval_fn=None,
+                   eval_every: int = 0, ring_size: int = 0, key=None,
+                   momentum=None, round_fn=None,
+                   donate: bool = True) -> ExperimentResult:
+    """Run a whole experiment inside ONE compiled program.
+
+    ``eval_fn(params) -> dict of scalars`` must be jit-traceable; it runs
+    in-scan every ``eval_every`` rounds. ``ring_size`` bounds the metrics
+    buffer (0 keeps every round). With ``donate`` the caller's params /
+    momentum / key buffers are consumed — reuse the returned ones.
+    """
+    if key is None:
+        key = experiment_key(cfg)
+    if momentum is None and algo == "fedzo" and cfg.server_momentum > 0:
+        momentum = tree_zeros_like(params)
+    fn = make_experiment_fn(loss_fn, cfg, rounds, algo=algo, eval_fn=eval_fn,
+                            eval_every=eval_every, ring_size=ring_size,
+                            round_fn=round_fn, donate=donate)
+    params, momentum, key, ring, ebuf = fn(params, momentum, key, store)
+    eval_rounds = (np.arange(0, rounds, eval_every)
+                   if (eval_fn is not None and eval_every > 0)
+                   else np.arange(0))
+    return ExperimentResult(params=params, momentum=momentum, key=key,
+                            metrics=ring, evals=ebuf, rounds=rounds,
+                            ring_size=min(rounds, ring_size) or rounds,
+                            eval_rounds=eval_rounds)
+
+
+def history(result: ExperimentResult, *, start_round: int = 0) -> list:
+    """FedServer-style per-round history from an engine result: ONE host
+    sync for everything (metrics ring + evals), then plain python floats."""
+    mets = jax.device_get(result.metrics)
+    evals = jax.device_get(result.evals)
+    ev_by_round = {int(t): {k: float(v[i]) for k, v in evals.items()}
+                   for i, t in enumerate(result.eval_rounds)}
+    out = []
+    for t in result.recorded_rounds():
+        row = {"round": start_round + int(t)}
+        slot = int(t) % result.ring_size
+        row.update({k: float(v[slot]) for k, v in mets.items()})
+        row.update(ev_by_round.get(int(t), {}))
+        out.append(row)
+    return out

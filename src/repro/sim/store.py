@@ -1,0 +1,90 @@
+"""Device-resident federated client store with in-jit sampling.
+
+The host server loop (fed/server.py) samples clients with host numpy and
+stacks minibatches on the host every round — a host→device round trip that
+stalls the compiled round engine. ``ClientStore`` moves the WHOLE federation
+onto the device once: all N client datasets stacked into padded arrays with
+per-client sizes, so both per-round draws happen inside jit:
+
+- ``sample_participants`` — the M-of-N participation draw (Algorithm 1's
+  uniform sampling) as a PRNG permutation prefix. No host sync,
+  bit-reproducible from the experiment key chain.
+- ``sample_batches`` — H minibatches of size b1 per sampled client, uniform
+  with replacement over that client's OWN rows (the same distribution as
+  the host ``data.synthetic.sample_local_batches``), gathered straight from
+  the stacked arrays.
+
+Padding rows are never sampled: the per-client ``randint`` upper bound is
+the client's true size, so the pad region is dead weight only
+(N · (cap − n_i) rows — bounded by the most uneven client split).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ClientStore(NamedTuple):
+    """All N clients' data as stacked padded arrays (a pytree with leading
+    [N, cap] axes) plus the true per-client row counts [N]."""
+    data: Any
+    sizes: jnp.ndarray
+
+    @property
+    def n_clients(self) -> int:
+        return self.sizes.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return jax.tree.leaves(self.data)[0].shape[1]
+
+
+def build_store(clients) -> ClientStore:
+    """Stack a list of per-client dataset pytrees (e.g. {"x": [n_i, ...],
+    "y": [n_i]}) into one device-resident ClientStore, zero-padding every
+    client to the largest row count."""
+    if not clients:
+        raise ValueError("build_store needs at least one client dataset")
+    sizes = []
+    for i, c in enumerate(clients):
+        ns = {int(np.shape(l)[0]) for l in jax.tree.leaves(c)}
+        if len(ns) != 1:
+            raise ValueError(
+                f"client {i} has leaves with mismatched row counts: {ns}")
+        sizes.append(ns.pop())
+    cap = max(sizes)
+
+    def stack(*leaves):
+        out = np.zeros((len(leaves), cap) + np.shape(leaves[0])[1:],
+                       np.asarray(leaves[0]).dtype)
+        for i, l in enumerate(leaves):
+            out[i, :len(l)] = np.asarray(l)
+        return jnp.asarray(out)
+
+    return ClientStore(data=jax.tree.map(stack, *clients),
+                       sizes=jnp.asarray(sizes, jnp.int32))
+
+
+def sample_participants(key, n_clients: int, m: int):
+    """Uniform M-of-N draw without replacement (paper Algorithm 1) as a
+    PRNG permutation prefix — [m] int32 client ids, fully in-jit."""
+    return jax.random.permutation(key, n_clients)[:m]
+
+
+def sample_batches(store: ClientStore, idx, key, h: int, b1: int):
+    """Gather [M, H, b1, ...] stacked minibatches for the sampled clients.
+
+    Per client: (h, b1) row indices uniform with replacement over
+    [0, sizes[i]) — the in-jit twin of the host ``sample_local_batches``
+    (same distribution; the PRNG stream necessarily differs).
+    """
+    keys = jax.random.split(key, idx.shape[0])
+
+    def one(i, k):
+        rows = jax.random.randint(k, (h, b1), 0, store.sizes[i])
+        return jax.tree.map(lambda l: l[i][rows], store.data)
+
+    return jax.vmap(one)(idx, keys)

@@ -1,0 +1,122 @@
+"""Vmapped scenario sweeps: the paper's experiment grids in one jit each.
+
+Sec. V sweeps {H, M, b2, SNR} over hundreds of rounds. Two kinds of knobs:
+
+- **Shape-static** fields (``local_iters``, ``n_participating``, ``b2``,
+  the aircomp/scheduling flags, ``batch_directions``…) change array shapes
+  or program structure — each distinct combination is its own compile.
+- **Value-dynamic** fields (``snr_db``, ``lr``, ``mu``, ``h_min``, and the
+  seed) only change numbers — they vmap over a stacked config axis.
+
+``run_sweep`` groups the scenario list by its static signature and runs
+each group as ONE jitted, vmapped ``engine.experiment_core`` — e.g. the
+paper's whole Fig. 1c/5 SNR curve family (one static shape × many SNRs ×
+many seeds) is a single compiled program. Results land in ``results/`` as
+long-format CSV (scenario, round, metric, value).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedZOConfig
+from repro.sim import engine
+from repro.sim.store import ClientStore
+
+# fields that vmap over the stacked config axis (everything else is static)
+DYNAMIC_FIELDS = ("snr_db", "lr", "mu", "h_min")
+
+
+def scenario_grid(**axes) -> list:
+    """Cartesian product of config-override axes into scenario dicts:
+    ``scenario_grid(local_iters=(1, 5), snr_db=(-5.0, 0.0))`` → 4 dicts."""
+    names = list(axes)
+    out = []
+    for combo in itertools.product(*(axes[n] for n in names)):
+        out.append(dict(zip(names, combo)))
+    return out
+
+
+def _split(scenario: dict):
+    dyn = {k: v for k, v in scenario.items() if k in DYNAMIC_FIELDS
+           or k == "seed"}
+    static = tuple(sorted((k, v) for k, v in scenario.items()
+                          if k not in dyn))
+    return static, dyn
+
+
+def run_sweep(loss_fn, params, store: ClientStore, base_cfg: FedZOConfig,
+              scenarios: Sequence[dict], rounds: int, *, algo: str = "fedzo",
+              eval_fn=None, eval_every: int = 0, ring_size: int = 0,
+              out_csv: Optional[str] = None) -> list:
+    """Run every scenario (dicts of FedZOConfig overrides) for ``rounds``
+    rounds; one jit per static-shape group, the dynamic axis vmapped.
+
+    Returns one record per scenario:
+    ``{"scenario": dict, "metrics": {name: [ring] np.ndarray},
+    "evals": {name: [n_evals] np.ndarray}, "eval_rounds": np.ndarray}``.
+    """
+    groups: dict = {}
+    for s in scenarios:
+        static, dyn = _split(s)
+        groups.setdefault(static, []).append((s, dyn))
+
+    records = []
+    for static, members in groups.items():
+        cfg = dataclasses.replace(base_cfg, **dict(static))
+        if algo == "fedzo" and cfg.server_momentum > 0:
+            raise ValueError("sweeps keep the carry momentum-free; run "
+                             "momentum configs through run_experiment")
+        dyn_stack = {f: jnp.asarray(
+            [m[1].get(f, getattr(base_cfg, f)) for m in members],
+            jnp.float32) for f in DYNAMIC_FIELDS}
+        seeds = jnp.asarray([m[1].get("seed", base_cfg.seed)
+                             for m in members], jnp.uint32)
+
+        def one(dyn, seed, cfg=cfg):
+            c = dataclasses.replace(cfg, **dyn)
+            key = jax.random.key(seed, impl=cfg.prng_impl)
+            return engine.experiment_core(
+                loss_fn, params, store, c, rounds, key, None, algo=algo,
+                eval_fn=eval_fn, eval_every=eval_every, ring_size=ring_size)
+
+        _, _, _, ring, ebuf = jax.jit(jax.vmap(one))(dyn_stack, seeds)
+        ring = jax.device_get(ring)
+        ebuf = jax.device_get(ebuf)
+        eval_rounds = (np.arange(0, rounds, eval_every)
+                       if (eval_fn is not None and eval_every > 0)
+                       else np.arange(0))
+        for g, (scenario, _) in enumerate(members):
+            records.append({
+                "scenario": dict(scenario),
+                "metrics": {k: np.asarray(v[g]) for k, v in ring.items()},
+                "evals": {k: np.asarray(v[g]) for k, v in ebuf.items()},
+                "eval_rounds": eval_rounds,
+            })
+
+    if out_csv:
+        save_csv(records, out_csv, rounds=rounds, ring_size=ring_size)
+    return records
+
+
+def save_csv(records, path, *, rounds: int, ring_size: int = 0) -> None:
+    """Long-format curve dump: scenario,round,metric,value — the raw
+    material for the paper's figure-style plots."""
+    ring = min(rounds, ring_size) if ring_size else rounds
+    start = rounds - ring
+    with open(path, "w") as f:
+        f.write("scenario,round,metric,value\n")
+        for rec in records:
+            tag = ";".join(f"{k}={v}" for k, v in
+                           sorted(rec["scenario"].items()))
+            for name, arr in rec["metrics"].items():
+                for t in range(start, rounds):
+                    f.write(f"{tag},{t},{name},{float(arr[t % ring])}\n")
+            for name, arr in rec["evals"].items():
+                for i, t in enumerate(rec["eval_rounds"]):
+                    f.write(f"{tag},{t},{name},{float(arr[i])}\n")
