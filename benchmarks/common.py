@@ -12,11 +12,9 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import FedZOConfig
-from repro.data.synthetic import (make_classification, noniid_shards,
-                                  random_partition)
+from repro.data.synthetic import make_classification, noniid_shards
 from repro.models import simple
 
 
@@ -29,43 +27,22 @@ def timed(fn, *args, n=1):
     return out, (time.perf_counter() - t0) / n * 1e6  # µs
 
 
-@functools.lru_cache(maxsize=1)
 def attack_setup(n_train=2000, n_attack=512, n_clients=10, seed=0):
-    """Train the black-box CNN on synthetic CIFAR-like data, then build the
-    federated attack problem over the correctly-classified images."""
-    x, y = make_classification(n_train + 512, 32 * 32 * 3, 10, seed=seed,
-                               scale=0.35, image_shape=(32, 32, 3))
-    xtr, ytr = jnp.asarray(x[:n_train]), jnp.asarray(y[:n_train])
-    params = simple.cnn_init(jax.random.key(seed))
-
-    @jax.jit
-    def sgd_step(p, xb, yb):
-        loss, g = jax.value_and_grad(simple.cnn_loss)(p, {"x": xb, "y": yb})
-        return jax.tree.map(lambda a, b: a - 0.05 * b, p, g), loss
-
-    rng = np.random.default_rng(seed)
-    for step in range(300):
-        idx = rng.integers(0, n_train, 64)
-        params, loss = sgd_step(params, xtr[idx], ytr[idx])
-
-    pred = jnp.argmax(simple.cnn_logits(params, jnp.asarray(x)), -1)
-    correct = np.asarray(pred == jnp.asarray(y))
-    acc = correct[:n_train].mean()
-    xi, yi = x[correct], y[correct]
-    xi, yi = xi[:n_attack], yi[:n_attack]
-    clients = random_partition(xi.reshape(len(yi), -1), yi, n_clients,
-                               seed=seed)
-    for c in clients:
-        c["x"] = c["x"].reshape(-1, 32, 32, 3)
-    return params, clients, float(acc), (jnp.asarray(xi), jnp.asarray(yi))
+    """Legacy tuple view of the attack workload (the canonical builder now
+    lives in ``repro.workloads.attack`` and caches the trained surrogate)."""
+    from repro.workloads import attack
+    task = attack.make_task(n_train=n_train, n_attack=n_attack,
+                            n_clients=n_clients, seed=seed)
+    return (task.classifier, task.clients, task.clean_accuracy,
+            (task.eval_batch["x"], task.eval_batch["y"]))
 
 
 def attack_loss_fn(classifier_params):
-    # c=0.3 keeps the paper's margin-vs-distortion trade-off but weights the
-    # attack term enough to make visible progress at reduced round counts.
+    from repro.workloads.attack import CW_C
+
     def loss(pert_params, batch):
         return simple.cw_attack_loss(pert_params["x"], batch,
-                                     classifier_params, c=0.3)
+                                     classifier_params, c=CW_C)
     return loss
 
 

@@ -18,11 +18,12 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (kernels_bench, roofline_report, round_bench,
-                            sim_bench, zo_path_bench)
+                            sim_bench, workloads_bench, zo_path_bench)
     suites = [("kernels", kernels_bench.run),
               ("zo_path", zo_path_bench.run),
               ("round", round_bench.run),
               ("sim", sim_bench.run),
+              ("workloads", workloads_bench.run),
               ("roofline", roofline_report.run)]
     if not args.quick:
         from benchmarks import paper_figures as pf

@@ -1,29 +1,62 @@
-"""Federated black-box attack (paper Sec V-A): FedZO finds a shared
-adversarial perturbation querying only classifier outputs (CW loss, Eq. 21).
+"""Federated black-box attack (paper Sec V-A), engine-native: FedZO finds a
+shared adversarial perturbation querying only classifier outputs (CW loss,
+Eq. 21). The whole experiment — store-driven rounds, in-scan attack-success
+eval — runs as ONE compiled program (repro.workloads.attack, DESIGN.md §10),
+then an SNR × seed AirComp sweep reproduces the Fig.-4-style curve family
+as long-format CSV in results/.
 
     PYTHONPATH=src python examples/blackbox_attack.py
+    PYTHONPATH=src python examples/blackbox_attack.py --smoke   # CI-sized
 """
-import sys
-sys.path.insert(0, ".")
+import argparse
+import os
 
-import jax
-import jax.numpy as jnp
+from repro import sim
+from repro.workloads import attack
 
-from benchmarks.common import attack_loss_fn, attack_setup
-from repro.configs.base import FedZOConfig
-from repro.fed.server import FedServer
-from repro.models.simple import attack_success
+ap = argparse.ArgumentParser()
+ap.add_argument("--rounds", type=int, default=20)
+ap.add_argument("--sweep-rounds", type=int, default=10)
+ap.add_argument("--smoke", action="store_true",
+                help="CI-sized task + round counts (seconds, not minutes)")
+ap.add_argument("--no-sweep", action="store_true")
+args = ap.parse_args()
 
-cls_params, clients, cls_acc, (xi, yi) = attack_setup()
-print(f"black-box classifier accuracy: {cls_acc:.3f}")
-loss = attack_loss_fn(cls_params)
+if args.smoke:
+    task = attack.make_task(n_train=400, n_attack=96, n_clients=5,
+                            train_steps=120)
+    cfg = attack.default_config(task, local_iters=3, b2=6, b1=8)
+    args.rounds, args.sweep_rounds = min(args.rounds, 4), 2
+else:
+    task = attack.make_task()
+    cfg = attack.default_config(task)
+print(f"black-box classifier accuracy: {task.clean_accuracy:.3f} "
+      f"(client sizes {[len(c['y']) for c in task.clients]})")
 
-cfg = FedZOConfig(n_devices=10, n_participating=10, local_iters=20,
-                  lr=1e-3, mu=1e-3, b1=25, b2=20)
-pert0 = {"x": jnp.zeros((32 * 32 * 3,), jnp.float32)}
-ev = jax.jit(lambda p: attack_success(p["x"], {"x": xi, "y": yi}, cls_params))
-server = FedServer(loss, pert0, clients, cfg,
-                   eval_fn=lambda p: {"attack_success": float(ev(p))})
-server.run(20, log_every=5)
-print(f"attack success rate: {server.history[-1]['attack_success']:.3f} "
-      f"(loss {server.history[-1]['mean_local_loss']:.4f})")
+res = attack.run(task, sim.fast_sim_config(cfg), args.rounds, eval_every=5,
+                 donate=False)
+hist = sim.history(res)
+for h in hist:
+    if "attack_success" in h:
+        print(f"round {h['round']:3d}  attack_success "
+              f"{h['attack_success']:.3f}  loss "
+              f"{h.get('mean_local_loss', float('nan')):.4f}")
+# headline number from the FINAL perturbation (the last in-scan eval can be
+# rounds old depending on the eval cadence)
+final = attack.attack_eval(task)(res.params)
+print(f"attack success rate: {float(final['attack_success']):.3f} "
+      f"(loss {hist[-1]['mean_local_loss']:.4f})")
+
+if not args.no_sweep:
+    out = os.path.join("results", "attack_snr_curve.csv")
+    os.makedirs("results", exist_ok=True)
+    recs = attack.run_sweep(task, sim.fast_sim_config(cfg),
+                            snr_dbs=(-10.0, 0.0, 10.0), seeds=(0, 1),
+                            rounds=args.sweep_rounds, eval_every=2,
+                            out_csv=out)
+    print(f"SNR sweep: {len(recs)} scenarios x {args.sweep_rounds} rounds "
+          f"-> {out}")
+    for r in recs:
+        s = r["scenario"]
+        print(f"  snr_db={s['snr_db']:+.0f} seed={s['seed']}  "
+              f"final attack_success {float(r['evals']['attack_success'][-1]):.3f}")

@@ -173,5 +173,11 @@ class FedZOConfig:
     # round and exclude clients with |h| < h_min from the aggregation (mask
     # into both the mean and Δ_max; m_effective reported per round)
     channel_schedule: bool = False
+    # FedAvg-style size-weighted aggregation: weight each sampled client's
+    # delta by n_i/n (its true row count over the sampled total) instead of
+    # the uniform 1/M — realistic for the uneven/label-skew partitions of
+    # the gradient-free workloads (repro.workloads). Threads through every
+    # aggregation path incl. masked/AirComp via a weighted mask_stats.
+    weight_by_size: bool = False
     # beyond-paper: upload {seeds, coefficients} instead of dense deltas
     delta_compression: str = "dense"  # dense | seed

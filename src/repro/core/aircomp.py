@@ -56,7 +56,7 @@ def schedule_by_channel(rng, n_devices, h_min):
     return h.astype(jnp.complex64), jnp.abs(h) >= h_min
 
 
-def mask_stats(mask, M):
+def mask_stats(mask, M, weights=None):
     """(maskf, m_div, m_sched) for a scheduling mask over M rows.
 
     ``m_div`` is the clamped mean/noise divisor (never 0, so an all-masked
@@ -64,12 +64,36 @@ def mask_stats(mask, M):
     TRUE scheduled-client count — this is what ``m_effective`` reports, so
     a 0-client round is distinguishable from a 1-client one. The one
     definition is shared by every aggregation path (pytree, fused-flat,
-    and the masked plain means in core/fedzo.py).
+    the masked plain means in core/fedzo.py, and the sharded round).
+
+    ``weights`` optionally carries FedAvg-style size weights (positive [M],
+    normalized by the caller so uniform sizes give all-ones — see
+    ``size_weights``): the returned per-row coefficients become
+    ``mask·w`` and the divisor ``Σ mask·w``, so the aggregate is the
+    weighted mean over the scheduled rows. ``m_sched`` stays the
+    UNWEIGHTED scheduled count. With all-ones weights this is bit-for-bit
+    the unweighted path.
     """
     maskf = (jnp.ones((M,), jnp.float32) if mask is None
              else mask.astype(jnp.float32))
     m_sched = jnp.sum(maskf)
-    return maskf, jnp.maximum(m_sched, 1.0), m_sched
+    if weights is None:
+        return maskf, jnp.maximum(m_sched, 1.0), m_sched
+    wf = maskf * weights.astype(jnp.float32)
+    # clamp tiny (not 1.0): a lone scheduled client with weight 0.5 must be
+    # divided by 0.5; an all-masked round still degenerates to zero update
+    # (zero numerator, zero Δ_max → zero noise)
+    return wf, jnp.maximum(jnp.sum(wf), 1e-8), m_sched
+
+
+def size_weights(sizes):
+    """FedAvg-style n_i/n client weights from row counts [M], normalized to
+    mean 1 (so uniform sizes → all-ones and the weighted divisor matches
+    the unweighted M in the Eq.-17 noise scale). Divide by the mean rather
+    than multiply by its reciprocal: s / (M·s / M) is EXACTLY 1.0 for
+    uniform sizes, keeping the documented bit-for-bit fallback."""
+    w = sizes.astype(jnp.float32)
+    return w / (jnp.sum(w) / w.shape[0])
 
 
 def _delta_sq_norms(deltas):
@@ -79,12 +103,15 @@ def _delta_sq_norms(deltas):
                        axis=tuple(range(1, l.ndim))) for l in leaves)
 
 
-def aircomp_aggregate(deltas, rng, *, snr_db, h_min, mask=None):
+def aircomp_aggregate(deltas, rng, *, snr_db, h_min, mask=None, weights=None):
     """Noisy mean of stacked deltas [M, ...] per Eq. 17.
 
     ``mask`` optionally marks which of the M rows actually transmit
     (channel-truncation scheduling); unmasked rows are excluded from both
-    the mean and Δ_max.
+    the mean and Δ_max. ``weights`` turns the mean into the FedAvg-style
+    size-weighted mean (see ``mask_stats``); Δ_max and the noise scale
+    keep their unweighted per-row norms — the channel doesn't know about
+    statistical weighting, only the post-scaling divisor changes.
     """
     m_leaves = jax.tree.leaves(deltas)
     M = m_leaves[0].shape[0]
@@ -92,7 +119,7 @@ def aircomp_aggregate(deltas, rng, *, snr_db, h_min, mask=None):
     sigma_w2 = P_TX / (10.0 ** (snr_db / 10.0))
 
     sq = _delta_sq_norms(deltas)                       # [M]
-    maskf, m_div, m_sched = mask_stats(mask, M)
+    maskf, m_div, m_sched = mask_stats(mask, M, weights)
     delta_max = jnp.max(jnp.where(maskf > 0, sq, 0.0))
 
     noise_var = sigma_w2 * delta_max / (m_div ** 2 * float(d) * P_TX * h_min ** 2)
@@ -112,7 +139,7 @@ def aircomp_aggregate(deltas, rng, *, snr_db, h_min, mask=None):
 
 
 def aircomp_aggregate_flat(deltas, rng, *, snr_db, h_min, d=None, mask=None,
-                           block_rows=None, interpret=None):
+                           weights=None, block_rows=None, interpret=None):
     """Eq.-17 aggregation of a flat delta matrix [M, n_pad] (fused kernel).
 
     One HBM pass over the matrix yields the per-row squared norms and the
@@ -127,7 +154,7 @@ def aircomp_aggregate_flat(deltas, rng, *, snr_db, h_min, d=None, mask=None,
     M, n = deltas.shape
     d = n if d is None else d
     sigma_w2 = P_TX / (10.0 ** (snr_db / 10.0))
-    maskf, m_div, m_sched = mask_stats(mask, M)
+    maskf, m_div, m_sched = mask_stats(mask, M, weights)
     mean, sq = kops.aircomp_reduce(deltas, maskf / m_div, d,
                                    block_rows=block_rows, interpret=interpret)
     delta_max = jnp.max(jnp.where(maskf > 0, sq, 0.0))

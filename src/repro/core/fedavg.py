@@ -24,12 +24,14 @@ def local_phase(loss_fn, params, batches, cfg: FedZOConfig):
 
 
 def round_simulated(loss_fn, server_params, client_batches, cfg: FedZOConfig,
-                    *, channel_rng=None):
+                    *, channel_rng=None, weights=None):
     """One FedAvg round over M clients (batches leading axes [M, H, ...]).
 
     Honors the same channel-truncation scheduling as the FedZO round
     (cfg.channel_schedule): masked clients are excluded from the mean and
-    Δ_max, m_effective lands in the metrics.
+    Δ_max, m_effective lands in the metrics. ``weights`` ([M] mean-1
+    normalized) selects the size-weighted n_i/n mean — the original
+    FedAvg aggregation — on every path.
     """
     def one_client(batches):
         p_fin, losses = local_phase(loss_fn, server_params, batches, cfg)
@@ -45,13 +47,14 @@ def round_simulated(loss_fn, server_params, client_batches, cfg: FedZOConfig,
         _, mask = schedule_by_channel(k_sched, M, cfg.h_min)
     if cfg.aircomp and channel_rng is not None:
         agg, stats = aircomp_aggregate(deltas, noise_rng, snr_db=cfg.snr_db,
-                                       h_min=cfg.h_min, mask=mask)
-    elif mask is not None:
-        maskf, m_div, m_sched = mask_stats(mask, M)
+                                       h_min=cfg.h_min, mask=mask,
+                                       weights=weights)
+    elif mask is not None or weights is not None:
+        maskf, m_div, m_sched = mask_stats(mask, M, weights)
         agg = jax.tree.map(
             lambda x: (jnp.einsum("m...,m->...", x.astype(jnp.float32),
                                   maskf) / m_div).astype(x.dtype), deltas)
-        stats = {"m_effective": m_sched}
+        stats = {"m_effective": m_sched} if mask is not None else {}
     else:
         agg = tree_scale(1.0 / M,
                          jax.tree.map(lambda x: jnp.sum(x, 0), deltas))

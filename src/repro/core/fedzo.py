@@ -202,7 +202,8 @@ def client_delta(loss_fn, params, batches, rng, cfg) -> tuple:
 
 
 def round_simulated(loss_fn, server_params, client_batches, client_rngs,
-                    cfg: FedZOConfig, *, channel_rng=None, momentum=None):
+                    cfg: FedZOConfig, *, channel_rng=None, momentum=None,
+                    weights=None):
     """One full communication round over the M sampled clients (vmapped).
 
     client_batches: pytree with leading [M, H, ...] axes.
@@ -222,6 +223,11 @@ def round_simulated(loss_fn, server_params, client_batches, client_rngs,
     (Sec. IV-A): a Rayleigh draw from ``channel_rng`` masks out clients
     with |h| < h_min; masked rows are excluded from both the mean and
     Δ_max and ``m_effective`` is reported in the metrics.
+
+    ``weights`` ([M] positive, mean-1 normalized — ``aircomp.size_weights``)
+    switches every aggregation path to the FedAvg-style size-weighted mean
+    n_i/n over the (scheduled) clients; the engine threads it from
+    ``ClientStore.sizes`` under ``cfg.weight_by_size``.
     """
     M = client_rngs.shape[0]
     mask = None
@@ -255,11 +261,11 @@ def round_simulated(loss_fn, server_params, client_batches, client_rngs,
         if cfg.aircomp and channel_rng is not None:
             agg_flat, air_stats = aircomp_aggregate_flat(
                 deltas, noise_rng, snr_db=cfg.snr_db, h_min=cfg.h_min,
-                d=spec.d, mask=mask, block_rows=br)
-        elif mask is not None:
-            maskf, m_div, m_sched = mask_stats(mask, M)
+                d=spec.d, mask=mask, weights=weights, block_rows=br)
+        elif mask is not None or weights is not None:
+            maskf, m_div, m_sched = mask_stats(mask, M, weights)
             agg_flat = jnp.einsum("mn,m->n", deltas, maskf) / m_div
-            air_stats = {"m_effective": m_sched}
+            air_stats = {"m_effective": m_sched} if mask is not None else {}
         else:
             agg_flat = jnp.mean(deltas, axis=0)
         agg = unflatten(agg_flat, spec)
@@ -274,14 +280,14 @@ def round_simulated(loss_fn, server_params, client_batches, client_rngs,
         if cfg.aircomp and channel_rng is not None:
             agg, air_stats = aircomp_aggregate(
                 deltas, noise_rng, snr_db=cfg.snr_db, h_min=cfg.h_min,
-                mask=mask)
-        elif mask is not None:
-            maskf, m_div, m_sched = mask_stats(mask, M)
+                mask=mask, weights=weights)
+        elif mask is not None or weights is not None:
+            maskf, m_div, m_sched = mask_stats(mask, M, weights)
             agg = jax.tree.map(
                 lambda x: (jnp.einsum("m...,m->...", x.astype(jnp.float32),
                                       maskf) / m_div).astype(x.dtype),
                 deltas)
-            air_stats = {"m_effective": m_sched}
+            air_stats = {"m_effective": m_sched} if mask is not None else {}
         else:
             agg = tree_scale(1.0 / M,
                              jax.tree.map(lambda x: jnp.sum(x, 0), deltas))

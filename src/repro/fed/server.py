@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedZOConfig
-from repro.core import fedavg, fedzo, seedcomm
+from repro.core import aircomp, fedavg, fedzo, seedcomm
 from repro.data.synthetic import sample_local_batches
 from repro.utils.tree import tree_add, tree_bytes, tree_zeros_like
 
@@ -78,20 +78,24 @@ class FedServer:
                 self.loss_fn, self.cfg, algo=self.algo))
             return
         self._key = jax.random.key(self.cfg.seed)
+        # ``w`` is the size-weight vector (None unless cfg.weight_by_size —
+        # None is an empty pytree, so the unweighted jit signature is
+        # unchanged)
         if self.algo == "fedzo":
             if self._momentum is not None:
                 self._round = jax.jit(
-                    lambda p, b, r, ch, m: fedzo.round_simulated(
+                    lambda p, b, r, ch, m, w: fedzo.round_simulated(
                         self.loss_fn, p, b, r, self.cfg, channel_rng=ch,
-                        momentum=m))
+                        momentum=m, weights=w))
             else:
                 self._round = jax.jit(
-                    lambda p, b, r, ch: fedzo.round_simulated(
-                        self.loss_fn, p, b, r, self.cfg, channel_rng=ch))
+                    lambda p, b, r, ch, w: fedzo.round_simulated(
+                        self.loss_fn, p, b, r, self.cfg, channel_rng=ch,
+                        weights=w))
         elif self.algo == "fedavg":
             self._round = jax.jit(
-                lambda p, b, ch: fedavg.round_simulated(
-                    self.loss_fn, p, b, self.cfg, channel_rng=ch))
+                lambda p, b, ch, w: fedavg.round_simulated(
+                    self.loss_fn, p, b, self.cfg, channel_rng=ch, weights=w))
         else:
             raise ValueError(self.algo)
 
@@ -116,17 +120,25 @@ class FedServer:
         else:
             chosen = self.sample_clients()
             batches = self._stack_batches(chosen)
+            weights = None
+            if self.cfg.weight_by_size:
+                sizes = jnp.asarray(
+                    [len(jax.tree.leaves(self.clients[i])[0])
+                     for i in chosen], jnp.float32)
+                weights = aircomp.size_weights(sizes)
             self._key, kr, kc = jax.random.split(self._key, 3)
             if self.algo == "fedzo":
                 rngs = jax.random.split(kr, len(chosen))
                 if self._momentum is not None:
                     self.params, metrics, self._momentum = self._round(
-                        self.params, batches, rngs, kc, self._momentum)
+                        self.params, batches, rngs, kc, self._momentum,
+                        weights)
                 else:
                     self.params, metrics = self._round(self.params, batches,
-                                                       rngs, kc)
+                                                       rngs, kc, weights)
             else:
-                self.params, metrics = self._round(self.params, batches, kc)
+                self.params, metrics = self._round(self.params, batches, kc,
+                                                   weights)
         # ONE host sync for the whole metrics dict, not one per metric
         metrics = {k: float(v) for k, v in jax.device_get(metrics).items()}
         metrics["round"] = t

@@ -33,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedZOConfig
-from repro.core import fedavg, fedzo
+from repro.core import aircomp, fedavg, fedzo
 from repro.sim.store import ClientStore, sample_batches, sample_participants
 from repro.utils.tree import tree_zeros_like
 
@@ -64,6 +64,7 @@ def make_round_step(loss_fn, cfg: FedZOConfig, *, algo: str = "fedzo",
     """
     has_momentum = algo == "fedzo" and _static_positive(cfg.server_momentum)
     fz_round = round_fn if round_fn is not None else fedzo.round_simulated
+    weigh = cfg.weight_by_size
 
     def step(state, store: ClientStore):
         params, momentum, key = state
@@ -72,18 +73,24 @@ def make_round_step(loss_fn, cfg: FedZOConfig, *, algo: str = "fedzo",
                                   cfg.n_participating)
         batches = sample_batches(store, idx, k_batch, cfg.local_iters,
                                  cfg.b1)
+        # FedAvg-style n_i/n weights of the sampled clients (mean-1
+        # normalized); only added to the round call when enabled so custom
+        # round_fns without a weights kwarg keep working
+        wkw = ({"weights": aircomp.size_weights(store.sizes[idx])}
+               if weigh else {})
         if algo == "fedavg":
             params, metrics = fedavg.round_simulated(
-                loss_fn, params, batches, cfg, channel_rng=k_chan)
+                loss_fn, params, batches, cfg, channel_rng=k_chan, **wkw)
         else:
             rngs = jax.random.split(k_zo, cfg.n_participating)
             if has_momentum:
                 params, metrics, momentum = fz_round(
                     loss_fn, params, batches, rngs, cfg, channel_rng=k_chan,
-                    momentum=momentum)
+                    momentum=momentum, **wkw)
             else:
                 params, metrics = fz_round(
-                    loss_fn, params, batches, rngs, cfg, channel_rng=k_chan)
+                    loss_fn, params, batches, rngs, cfg, channel_rng=k_chan,
+                    **wkw)
         return (params, momentum, key), metrics
 
     return step
@@ -215,12 +222,21 @@ def run_experiment(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
 
 def history(result: ExperimentResult, *, start_round: int = 0) -> list:
     """FedServer-style per-round history from an engine result: ONE host
-    sync for everything (metrics ring + evals), then plain python floats."""
+    sync for everything (metrics ring + evals), then plain python floats.
+
+    Eval rounds evicted from the metrics ring (a long run with a small
+    ``ring_size``) still surface as eval-only rows — the in-scan evals live
+    in their own [n_evals] buffer, so the full accuracy curve survives
+    however small the ring is."""
     mets = jax.device_get(result.metrics)
     evals = jax.device_get(result.evals)
     ev_by_round = {int(t): {k: float(v[i]) for k, v in evals.items()}
                    for i, t in enumerate(result.eval_rounds)}
+    ring_start = max(0, result.rounds - result.ring_size)
     out = []
+    for t in sorted(ev_by_round):
+        if t < ring_start:                  # evicted from the ring: eval-only
+            out.append({"round": start_round + t, **ev_by_round[t]})
     for t in result.recorded_rounds():
         row = {"round": start_round + int(t)}
         slot = int(t) % result.ring_size

@@ -44,7 +44,7 @@ def make_sharded_round(loss_fn, cfg: FedZOConfig, mesh: Mesh, *,
     n_dev = mesh.shape[axis]
 
     def round_fn(loss_fn_, server_params, client_batches, client_rngs, cfg_,
-                 *, channel_rng=None, momentum=None):
+                 *, channel_rng=None, momentum=None, weights=None):
         if loss_fn_ is not loss_fn or cfg_ is not cfg:
             # the mesh deployment (phase choice, geometry, device split) is
             # bound at construction — a per-call substitution would silently
@@ -67,7 +67,10 @@ def make_sharded_round(loss_fn, cfg: FedZOConfig, mesh: Mesh, *,
             k_sched, noise_rng = jax.random.split(channel_rng)
             _, mask = schedule_by_channel(k_sched, M, cfg.h_min)
         use_air = cfg.aircomp and channel_rng is not None
-        maskf, m_div, m_sched = mask_stats(mask, M)
+        # size weighting rides the same per-row coefficient vector the mask
+        # does, so the weighted round shards identically to the masked one
+        use_rowcoef = mask is not None or weights is not None
+        maskf, m_div, m_sched = mask_stats(mask, M, weights)
 
         def shard_body(b0, params, batches_l, rngs_l, maskf_l):
             keys = jax.vmap(lambda r: jax.random.split(
@@ -91,7 +94,7 @@ def make_sharded_round(loss_fn, cfg: FedZOConfig, mesh: Mesh, *,
                 part, sq_l = kops.aircomp_reduce(deltas_l, maskf_l / m_div,
                                                  spec.d, block_rows=br)
                 mean = jax.lax.psum(part, axis)
-            elif mask is not None:
+            elif use_rowcoef:
                 part = jnp.einsum("mn,m->n", deltas_l, maskf_l)
                 mean = jax.lax.psum(part, axis) / m_div
                 sq_l = jnp.zeros((deltas_l.shape[0],), jnp.float32)

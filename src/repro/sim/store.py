@@ -55,6 +55,15 @@ def build_store(clients) -> ClientStore:
             raise ValueError(
                 f"client {i} has leaves with mismatched row counts: {ns}")
         sizes.append(ns.pop())
+    leaves0 = jax.tree.leaves(clients[0])
+    for i, c in enumerate(clients[1:], start=1):
+        for j, (l0, l) in enumerate(zip(leaves0, jax.tree.leaves(c))):
+            d0, d = np.asarray(l0).dtype, np.asarray(l).dtype
+            if d0 != d:
+                raise ValueError(
+                    f"client {i} leaf {j} has dtype {d} but client 0 has "
+                    f"{d0} — stacking would silently cast; make the client "
+                    f"datasets dtype-uniform")
     cap = max(sizes)
 
     def stack(*leaves):

@@ -1,0 +1,20 @@
+"""repro.workloads — engine-native gradient-free tasks (DESIGN.md §10).
+
+The paper motivates FedZO by the settings where gradients are unavailable;
+this package makes those settings first-class workloads on the simulation
+engine (repro.sim): each workload builds a device-resident ``ClientStore``,
+exposes its objective through the ``loss(params, batch) -> scalar``
+contract, ships a jit-traceable in-scan eval, and runs whole experiments /
+scenario sweeps as single compiled programs.
+
+- ``attack``    — the Sec. V-A federated black-box adversarial attack
+  (CW loss on a frozen classifier; clients hold private image shards).
+- ``hypertune`` — federated hyperparameter tuning: the "model" is a small
+  vector of transformed hyperparameters, the ZO loss is the inner-trained
+  validation loss on each client's private shard.
+"""
+from __future__ import annotations
+
+from repro.workloads import attack, hypertune
+
+__all__ = ["attack", "hypertune"]

@@ -1,0 +1,150 @@
+"""Engine-native federated black-box adversarial attack (paper Sec. V-A).
+
+FedZO finds ONE shared perturbation that fools a frozen classifier, querying
+only its outputs (CW loss, Eq. 21) — the canonical gradients-unavailable
+scenario. This module ports the task onto the simulation engine
+(DESIGN.md §9/§10): the per-client attack images live in a device-resident
+``ClientStore`` (uneven sizes per the paper — 'each device is assigned a
+random number of samples' — or Dirichlet label skew), the attack-success
+eval runs in-scan, and the paper's SNR sweep is one vmapped compiled
+program per static shape, landing as long-format CSV in ``results/``.
+
+The classifier stands in for the pretrained CIFAR-10 network (the container
+is offline): a small CNN trained in-repo on synthetic CIFAR-like images;
+the attack only ever queries it as a black box.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sim
+from repro.configs.base import FedZOConfig
+from repro.data.synthetic import (dirichlet_partition, make_classification,
+                                  random_partition)
+from repro.models import simple
+
+IMAGE_SHAPE = (32, 32, 3)
+D = int(np.prod(IMAGE_SHAPE))
+# CW margin-vs-distortion trade-off: weights the attack term enough to make
+# visible progress at reduced round counts. ONE constant shared by the loss
+# and the in-scan eval so the reported curve is the optimized objective.
+CW_C = 0.3
+
+
+class AttackTask(NamedTuple):
+    """The federated attack problem: a frozen black-box classifier, the
+    per-client image shards (host lists + stacked device store), and the
+    pooled correctly-classified images the success rate is measured on."""
+    classifier: dict
+    clients: list
+    store: sim.ClientStore
+    eval_batch: dict
+    clean_accuracy: float
+
+
+@functools.lru_cache(maxsize=2)
+def make_task(n_train=2000, n_attack=512, n_clients=10, seed=0,
+              train_steps=300, partition="uneven", alpha=0.5) -> AttackTask:
+    """Train the surrogate classifier on synthetic CIFAR-like data, keep the
+    correctly-classified images, and split them across ``n_clients``
+    (``partition``: "uneven" random sizes, "dirichlet" label skew with
+    concentration ``alpha``, or "even")."""
+    x, y = make_classification(n_train + 512, D, 10, seed=seed,
+                               scale=0.35, image_shape=IMAGE_SHAPE)
+    xtr, ytr = jnp.asarray(x[:n_train]), jnp.asarray(y[:n_train])
+    params = simple.cnn_init(jax.random.key(seed))
+
+    @jax.jit
+    def sgd_step(p, xb, yb):
+        loss, g = jax.value_and_grad(simple.cnn_loss)(p, {"x": xb, "y": yb})
+        return jax.tree.map(lambda a, b: a - 0.05 * b, p, g), loss
+
+    rng = np.random.default_rng(seed)
+    for _ in range(train_steps):
+        idx = rng.integers(0, n_train, 64)
+        params, _ = sgd_step(params, xtr[idx], ytr[idx])
+
+    pred = jnp.argmax(simple.cnn_logits(params, jnp.asarray(x)), -1)
+    correct = np.asarray(pred == jnp.asarray(y))
+    acc = correct[:n_train].mean()
+    xi, yi = x[correct][:n_attack], y[correct][:n_attack]
+    flat = xi.reshape(len(yi), -1)
+    if partition == "dirichlet":
+        clients = dirichlet_partition(flat, yi, n_clients, alpha=alpha,
+                                      seed=seed)
+    else:
+        clients = random_partition(flat, yi, n_clients, seed=seed,
+                                   uneven=(partition == "uneven"))
+    for c in clients:
+        c["x"] = c["x"].reshape((-1,) + IMAGE_SHAPE)
+    return AttackTask(classifier=params, clients=clients,
+                      store=sim.build_store(clients),
+                      eval_batch={"x": jnp.asarray(xi), "y": jnp.asarray(yi)},
+                      clean_accuracy=float(acc))
+
+
+def attack_loss(task: AttackTask, c=CW_C):
+    """The engine's loss contract for the CW objective: ``loss(pert_params,
+    batch) -> scalar`` with the classifier closed over as a black box.
+    Pass the same ``c`` to ``attack_eval`` when overriding it."""
+    def loss(pert_params, batch):
+        return simple.cw_attack_loss(pert_params["x"], batch,
+                                     task.classifier, c=c)
+    return loss
+
+
+def attack_eval(task: AttackTask, c=CW_C):
+    """jit-traceable in-scan eval: attack success rate + CW loss over the
+    pooled correctly-classified images (``c`` must match the loss's so the
+    reported curve is the optimized objective)."""
+    def ev(pert_params):
+        return {"attack_success": simple.attack_success(
+                    pert_params["x"], task.eval_batch, task.classifier),
+                "eval_cw_loss": simple.cw_attack_loss(
+                    pert_params["x"], task.eval_batch, task.classifier,
+                    c=c)}
+    return ev
+
+
+def pert_init():
+    """The shared perturbation the federation optimizes (the ZO variable)."""
+    return {"x": jnp.zeros((D,), jnp.float32)}
+
+
+def default_config(task: AttackTask, **overrides) -> FedZOConfig:
+    """The example's attack hyperparameters (Sec. V-A scale-reduced):
+    full participation, H=20 local iterates, b2=20 directions."""
+    kw = dict(n_devices=task.store.n_clients,
+              n_participating=task.store.n_clients,
+              local_iters=20, lr=1e-3, mu=1e-3, b1=25, b2=20,
+              weight_by_size=True)
+    kw.update(overrides)
+    return FedZOConfig(**kw)
+
+
+def run(task: AttackTask, cfg: FedZOConfig, rounds: int, *, eval_every=5,
+        **kw) -> sim.ExperimentResult:
+    """One attack experiment inside ONE compiled program: store-driven
+    rounds with the in-scan attack-success eval every ``eval_every``."""
+    return sim.run_experiment(attack_loss(task), pert_init(), task.store,
+                              cfg, rounds, eval_fn=attack_eval(task),
+                              eval_every=eval_every, **kw)
+
+
+def run_sweep(task: AttackTask, base_cfg: FedZOConfig, *, snr_dbs, seeds,
+              rounds: int, eval_every=5, out_csv=None):
+    """The Fig.-4-style AirComp SNR curve family: an SNR × seed grid over
+    the attack experiment, one compile for the whole family (the SNR and
+    seed axes vmap — sim/sweep.py), curves dumped as long-format CSV."""
+    import dataclasses
+    cfg = dataclasses.replace(base_cfg, aircomp=True)
+    scen = sim.scenario_grid(snr_db=tuple(float(s) for s in snr_dbs),
+                             seed=tuple(int(s) for s in seeds))
+    return sim.run_sweep(attack_loss(task), pert_init(), task.store, cfg,
+                         scen, rounds, eval_fn=attack_eval(task),
+                         eval_every=eval_every, out_csv=out_csv)
