@@ -1,21 +1,15 @@
-"""Shared setup for the paper-figure benchmarks.
+"""Shared timing helper for the benchmark suites.
 
-Scales are reduced (CPU container) but keep every structural element of the
-paper's experiments: the CW attack loss on a trained conv classifier over
-synthetic CIFAR-like images (Sec V-A), and softmax regression on a synthetic
-Fashion-MNIST-like non-iid split (Sec V-B).
+The figure-specific setups that used to live here moved into the workload
+layer: the attack task builder is ``repro.workloads.attack.make_task``, the
+neural classification tasks are ``repro.workloads.neural.make_task``
+(benchmarks/paper_figures.py drives them).
 """
 from __future__ import annotations
 
-import functools
 import time
 
 import jax
-import jax.numpy as jnp
-
-from repro.configs.base import FedZOConfig
-from repro.data.synthetic import make_classification, noniid_shards
-from repro.models import simple
 
 
 def timed(fn, *args, n=1):
@@ -25,40 +19,3 @@ def timed(fn, *args, n=1):
         out = fn(*args)
     jax.block_until_ready(out)
     return out, (time.perf_counter() - t0) / n * 1e6  # µs
-
-
-def attack_setup(n_train=2000, n_attack=512, n_clients=10, seed=0):
-    """Legacy tuple view of the attack workload (the canonical builder now
-    lives in ``repro.workloads.attack`` and caches the trained surrogate)."""
-    from repro.workloads import attack
-    task = attack.make_task(n_train=n_train, n_attack=n_attack,
-                            n_clients=n_clients, seed=seed)
-    return (task.classifier, task.clients, task.clean_accuracy,
-            (task.eval_batch["x"], task.eval_batch["y"]))
-
-
-def attack_loss_fn(classifier_params):
-    from repro.workloads.attack import CW_C
-
-    def loss(pert_params, batch):
-        return simple.cw_attack_loss(pert_params["x"], batch,
-                                     classifier_params, c=CW_C)
-    return loss
-
-
-@functools.lru_cache(maxsize=1)
-def softmax_setup(n=4000, n_clients=50, seed=0):
-    x, y = make_classification(n + 1000, 784, 10, seed=seed)
-    clients = noniid_shards(x[:n], y[:n], n_clients)
-    test = {"x": jnp.asarray(x[n:]), "y": jnp.asarray(y[n:])}
-    return clients, test
-
-
-def run_fedzo_rounds(loss_fn, params0, clients, cfg: FedZOConfig, rounds,
-                     eval_fn=None):
-    from repro.fed.server import FedServer
-    srv = FedServer(loss_fn, params0, clients, cfg, eval_fn=eval_fn)
-    t0 = time.perf_counter()
-    hist = srv.run(rounds)
-    us = (time.perf_counter() - t0) / rounds * 1e6
-    return srv.params, hist, us

@@ -26,14 +26,11 @@ def main() -> None:
               ("workloads", workloads_bench.run),
               ("roofline", roofline_report.run)]
     if not args.quick:
+        # the Sec. V-B figure harness (one vmapped sweep per figure; CSVs
+        # land in results/) at smoke scale — the full grids run via the
+        # slow-marked test / the paper_figures CLI
         from benchmarks import paper_figures as pf
-        suites = [
-            ("fig1a", pf.fig1a_h_sweep), ("fig1a_b", pf.fig1a_baselines),
-            ("fig1b", pf.fig1b_m_sweep), ("fig1c", pf.fig1c_snr_sweep),
-            ("fig2", pf.fig2_attack_accuracy), ("fig3", pf.fig3_softmax_h),
-            ("fig4", pf.fig4_softmax_m), ("fig5", pf.fig5_softmax_snr),
-            ("table1", pf.table1_rate_scaling),
-        ] + suites
+        suites = [("figures", pf.run)] + suites
 
     print("name,us_per_call,derived")
     failed = False

@@ -132,6 +132,36 @@ def dirichlet_partition(x, y, n_clients, alpha=0.5, seed=0):
             for a in assign]
 
 
+def federated_classification(n_train, n_test, n_clients, *, n_features=784,
+                             n_classes=10, seed=0, scale=1.0,
+                             image_shape=None, partition="dirichlet",
+                             alpha=0.5, shards_per_client=2):
+    """The Sec. V-B data protocol in one call: a synthetic classification
+    problem split into federated client shards plus a pooled held-out test
+    batch. ``partition``: "dirichlet" (Hsu-style label skew, concentration
+    ``alpha``), "shards" (the paper's label-sorted deal), "iid", or
+    "uneven" (IID rows, Dirichlet client sizes). Returns
+    (clients, test_batch)."""
+    x, y = make_classification(n_train + n_test, n_features, n_classes,
+                               seed=seed, scale=scale,
+                               image_shape=image_shape)
+    xtr, ytr = x[:n_train], y[:n_train]
+    if partition == "dirichlet":
+        clients = dirichlet_partition(xtr, ytr, n_clients, alpha=alpha,
+                                      seed=seed)
+    elif partition == "shards":
+        clients = noniid_shards(xtr, ytr, n_clients,
+                                shards_per_client=shards_per_client,
+                                seed=seed)
+    elif partition in ("iid", "uneven"):
+        clients = random_partition(xtr, ytr, n_clients, seed=seed,
+                                   uneven=(partition == "uneven"))
+    else:
+        raise ValueError(f"unknown partition {partition!r}; use dirichlet | "
+                         f"shards | iid | uneven")
+    return clients, {"x": x[n_train:], "y": y[n_train:]}
+
+
 def sample_local_batches(client, rng: np.random.Generator, h, b1):
     """Pre-sample H minibatches of size b1 for one client round -> stacked."""
     n = len(client["y"])

@@ -1,7 +1,10 @@
 """Models for the paper's own experiments (Sec. V).
 
 - ``softmax_regression``: the Fashion-MNIST multinomial classifier of Sec V-B.
-- ``SmallCNN``: a small conv classifier standing in for the pretrained
+- ``smallcnn_*``: a trainable LeNet-style SmallCNN — the Sec V-B CNN track
+  (conv → pool → conv → pool → linear head), a first-class FedZO *workload*
+  via ``repro.workloads.neural``.
+- ``cnn_*``: a small conv classifier standing in for the pretrained
   CIFAR-10 network of Carlini & Wagner used in Sec V-A (the container is
   offline; we train this surrogate in-repo on synthetic CIFAR-like data).
 - ``cw_attack_loss``: the Carlini-Wagner federated black-box attack loss,
@@ -12,6 +15,14 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+
+def mean_xent(logits, y):
+    """Mean cross-entropy of integer labels — shared by every classifier
+    loss here so they stay numerically identical formulations."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - ll)
 
 
 # ---------------------------------------------------------------------------
@@ -29,14 +40,60 @@ def softmax_logits(params, x):
 
 def softmax_loss(params, batch):
     """batch: {"x": [B, F], "y": [B]} -> mean cross-entropy."""
-    logits = softmax_logits(params, batch["x"])
-    lse = jax.nn.logsumexp(logits, axis=-1)
-    ll = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
-    return jnp.mean(lse - ll)
+    return mean_xent(softmax_logits(params, batch["x"]), batch["y"])
 
 
 def softmax_accuracy(params, batch):
     pred = jnp.argmax(softmax_logits(params, batch["x"]), axis=-1)
+    return jnp.mean((pred == batch["y"]).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# trainable LeNet-style SmallCNN (Sec V-B CNN track)
+
+
+def _conv_pool(h, w):
+    h = jax.lax.conv_general_dilated(h, w, (1, 1), "SAME",
+                                     dimension_numbers=("NHWC", "HWIO",
+                                                        "NHWC"))
+    h = jax.nn.relu(h)
+    return jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID")
+
+
+def smallcnn_init(rng, image_shape=(28, 28, 1), n_classes=10, width=8):
+    """LeNet-style trainable classifier: 3×3 conv → 2×2 pool, twice, then a
+    linear head. ``image_shape`` is free (grayscale F-MNIST-like by
+    default); the head size follows the two VALID pools (s → ⌊s/2⌋)."""
+    h, w, cin = image_shape
+    fh, fw = (h // 2) // 2, (w // 2) // 2
+    ks = jax.random.split(rng, 3)
+
+    def conv(k, ci, co):
+        return (jax.random.normal(k, (3, 3, ci, co), jnp.float32)
+                * (2.0 / (9 * ci)) ** 0.5)
+
+    return {"c1": conv(ks[0], cin, width),
+            "c2": conv(ks[1], width, 2 * width),
+            "w": jax.random.normal(ks[2], (2 * width * fh * fw, n_classes),
+                                   jnp.float32) * 0.01,
+            "b": jnp.zeros((n_classes,), jnp.float32)}
+
+
+def smallcnn_logits(params, images):
+    """images [B, H, W, C] in [0, 1] -> logits [B, n_classes]."""
+    h = images * 2.0 - 1.0
+    h = _conv_pool(h, params["c1"])
+    h = _conv_pool(h, params["c2"])
+    return h.reshape(h.shape[0], -1) @ params["w"] + params["b"]
+
+
+def smallcnn_loss(params, batch):
+    return mean_xent(smallcnn_logits(params, batch["x"]), batch["y"])
+
+
+def smallcnn_accuracy(params, batch):
+    pred = jnp.argmax(smallcnn_logits(params, batch["x"]), axis=-1)
     return jnp.mean((pred == batch["y"]).astype(jnp.float32))
 
 
@@ -73,10 +130,7 @@ def cnn_logits(params, images):
 
 
 def cnn_loss(params, batch):
-    logits = cnn_logits(params, batch["x"])
-    lse = jax.nn.logsumexp(logits, axis=-1)
-    ll = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
-    return jnp.mean(lse - ll)
+    return mean_xent(cnn_logits(params, batch["x"]), batch["y"])
 
 
 # ---------------------------------------------------------------------------

@@ -180,6 +180,49 @@ def loss_fn(params, batch, cfg, mesh=None, n_groups=1):
 
 
 # ---------------------------------------------------------------------------
+# tiny classifier head (the neural FedZO workload's transformer track,
+# DESIGN.md §11): images chopped into patch tokens, the SAME stacked-block
+# backbone as the LM, mean-pooled into a linear head. No vocab, no causal
+# masking requirement beyond what the blocks impose — FedZO only ever sees
+# ``classifier_loss(params, batch) -> scalar``.
+
+
+def init_classifier(rng, cfg, *, n_patches, patch_dim, n_classes):
+    """Patch-embed + positional table + cfg.n_layers stacked blocks + head."""
+    from repro.models.layers import dense_init
+
+    dtype = _dtype(cfg)
+    ks = jax.random.split(rng, 3)
+    return {"patch": dense_init(ks[0], patch_dim, cfg.d_model, dtype),
+            "pos": jnp.zeros((n_patches, cfg.d_model), dtype),
+            "blocks": _stack_init(ks[1], cfg.n_layers,
+                                  lambda k: init_block(k, cfg, dtype)),
+            "final_norm": init_norm(cfg.d_model, cfg.norm, dtype),
+            "head": dense_init(ks[2], cfg.d_model, n_classes, dtype)}
+
+
+def classifier_logits(params, cfg, x):
+    """x [B, n_patches·patch_dim] (or [B, n_patches, patch_dim]) → logits."""
+    n_p, d = params["pos"].shape
+    h = x.reshape(x.shape[0], n_p, -1).astype(_dtype(cfg))
+    h = h @ params["patch"] + params["pos"]
+    h, _ = _scan_blocks(params["blocks"], cfg, h, None)
+    h = norm_fwd(params["final_norm"], h, cfg.norm)
+    return jnp.mean(h, axis=1) @ params["head"]
+
+
+def classifier_loss(params, batch, cfg):
+    from repro.models.simple import mean_xent
+
+    return mean_xent(classifier_logits(params, cfg, batch["x"]), batch["y"])
+
+
+def classifier_accuracy(params, batch, cfg):
+    pred = jnp.argmax(classifier_logits(params, cfg, batch["x"]), axis=-1)
+    return jnp.mean((pred == batch["y"]).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
 # prefill / decode with caches
 
 

@@ -12,9 +12,12 @@ scenario sweeps as single compiled programs.
 - ``hypertune`` — federated hyperparameter tuning: the "model" is a small
   vector of transformed hyperparameters, the ZO loss is the inner-trained
   validation loss on each client's private shard.
+- ``neural``    — the Sec. V-B *training* track (DESIGN.md §11): softmax
+  regression, a trainable LeNet-style SmallCNN, and a tiny transformer
+  head as engine-native FedZO tasks with in-scan top-1 accuracy eval.
 """
 from __future__ import annotations
 
-from repro.workloads import attack, hypertune
+from repro.workloads import attack, hypertune, neural
 
-__all__ = ["attack", "hypertune"]
+__all__ = ["attack", "hypertune", "neural"]

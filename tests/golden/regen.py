@@ -1,0 +1,117 @@
+"""Golden-trajectory fixtures for the neural FedZO tasks (DESIGN.md §11).
+
+Each fixture pins a short (≤10-round) engine run of a counter-convention
+neural task BIT-EXACTLY: per-round metrics, the in-scan eval curve, and the
+full final parameter buffer are stored as hex-encoded float32 bytes (plus a
+human-readable approximation). ``tests/test_golden.py`` re-runs the same
+configs and diffs against these files, so a kernel or engine refactor that
+drifts numerics — even by one ulp — fails loudly instead of silently
+changing every downstream result.
+
+Regenerate after an INTENTIONAL numerics change (new jax pin, a deliberate
+kernel rework) with:
+
+    PYTHONPATH=src python tests/golden/regen.py [--only NAME]
+
+and eyeball the diff: the "approx" fields make an accidental large drift
+obvious in review.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+# every fixture runs the counter direction convention — the one convention
+# shared bit-exactly by the pytree reference and the flat Pallas kernels,
+# so the same fixture pins both ends (DESIGN.md §7)
+_SOFTMAX_TASK = dict(name="softmax", n_train=320, n_test=96, n_clients=6,
+                     n_features=24, n_classes=4, alpha=0.5)
+_CNN_TASK = dict(name="cnn", n_train=240, n_test=64, n_clients=6,
+                 n_classes=4, image_shape=(12, 12, 1), width=4)
+_BASE_CFG = dict(n_participating=3, local_iters=2, b1=8, b2=4, lr=5e-2,
+                 mu=1e-3, direction_conv="counter", seed=11)
+
+GOLDEN = {
+    # pytree reference path
+    "softmax_counter": dict(task=_SOFTMAX_TASK, cfg=_BASE_CFG, rounds=8),
+    # flat-buffer Pallas hot path (interpret mode on CPU) — same task, so a
+    # drift in the kernels alone shows up as THIS fixture diverging
+    "softmax_flat": dict(task=_SOFTMAX_TASK,
+                         cfg={**_BASE_CFG, "flat_params": True,
+                              "flat_block_rows": 4}, rounds=8),
+    # channel numerics: Rayleigh scheduling + Eq.-17 AirComp noise on the
+    # fused flat aggregation
+    "softmax_aircomp": dict(task=_SOFTMAX_TASK,
+                            cfg={**_BASE_CFG, "flat_params": True,
+                                 "flat_block_rows": 4, "aircomp": True,
+                                 "snr_db": 5.0, "channel_schedule": True},
+                            rounds=8),
+    # the conv track on the pytree counter path
+    "cnn_counter": dict(task=_CNN_TASK, cfg={**_BASE_CFG, "lr": 2e-2},
+                        rounds=6),
+}
+
+
+def _hex32(arr) -> list:
+    return [np.float32(v).tobytes().hex() for v in np.asarray(arr).ravel()]
+
+
+def _approx(arr) -> list:
+    return [float(np.float32(v)) for v in np.asarray(arr).ravel()]
+
+
+def run_fixture(name: str) -> dict:
+    """Run one golden config and return its bit-exact payload."""
+    import jax
+
+    from repro import sim
+    from repro.workloads import neural
+
+    spec = GOLDEN[name]
+    task_kw = dict(spec["task"])
+    task = neural.make_task(task_kw.pop("name"), **task_kw)
+    cfg = neural.default_config(task, **spec["cfg"])
+    res = neural.run(task, cfg, spec["rounds"], eval_every=2,
+                     eval_rows=spec["task"]["n_test"], donate=False)
+    mets = jax.device_get(res.metrics)
+    evals = jax.device_get(res.evals)
+    buf = np.concatenate([np.asarray(l, np.float32).ravel()
+                          for l in jax.tree.leaves(res.params)])
+    return {
+        "task": spec["task"], "cfg": spec["cfg"], "rounds": spec["rounds"],
+        "metrics": {k: _hex32(v) for k, v in sorted(mets.items())},
+        "metrics_approx": {k: _approx(v) for k, v in sorted(mets.items())},
+        "evals": {k: _hex32(v) for k, v in sorted(evals.items())},
+        "evals_approx": {k: _approx(v) for k, v in sorted(evals.items())},
+        "final_params_hex": buf.tobytes().hex(),
+        "final_params_head_approx": _approx(buf[:8]),
+        "n_params": int(buf.size),
+    }
+
+
+def fixture_path(name: str) -> str:
+    return os.path.join(HERE, f"{name}.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--only", default="",
+                    help="regenerate just this fixture name")
+    args = ap.parse_args(argv)
+    names = [args.only] if args.only else sorted(GOLDEN)
+    for name in names:
+        payload = run_fixture(name)
+        with open(fixture_path(name), "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"wrote {fixture_path(name)} "
+              f"({payload['n_params']} params, {payload['rounds']} rounds)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,78 @@
+"""Golden-trajectory regression suite (DESIGN.md §11).
+
+Re-runs the short counter-convention neural-task experiments whose
+trajectories are committed under ``tests/golden/`` and diffs every per-round
+metric, the in-scan eval curve, and the full final parameter buffer
+BIT-EXACTLY against the fixtures. A kernel or engine refactor that drifts
+numerics — by one ulp — fails here loudly instead of silently shifting all
+downstream results.
+
+After an INTENTIONAL numerics change, regenerate and review:
+
+    PYTHONPATH=src python tests/golden/regen.py
+"""
+from __future__ import annotations
+
+import importlib.util
+import json
+import os
+
+import numpy as np
+import pytest
+
+_REGEN = os.path.join(os.path.dirname(os.path.abspath(__file__)), "golden",
+                      "regen.py")
+_spec = importlib.util.spec_from_file_location("golden_regen", _REGEN)
+golden_regen = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(golden_regen)
+
+REGEN_HINT = ("bit-exact golden trajectory diverged; if the numerics change "
+              "is INTENTIONAL regenerate with "
+              "`PYTHONPATH=src python tests/golden/regen.py` and review the "
+              "approx-field diff")
+
+
+@pytest.mark.parametrize("name", sorted(golden_regen.GOLDEN))
+def test_golden_trajectory(name):
+    path = golden_regen.fixture_path(name)
+    assert os.path.exists(path), (
+        f"missing fixture {path}; generate it with "
+        f"`PYTHONPATH=src python tests/golden/regen.py --only {name}`")
+    with open(path) as f:
+        want = json.load(f)
+    # the fixture's recorded config must match the in-repo definition —
+    # otherwise the diff would compare different experiments
+    spec = golden_regen.GOLDEN[name]
+    assert want["task"] == {k: (list(v) if isinstance(v, tuple) else v)
+                            for k, v in spec["task"].items()}, (
+        f"{name}: fixture was generated from a different task config — "
+        f"regenerate")
+    assert want["cfg"] == spec["cfg"], (
+        f"{name}: fixture was generated from a different run config — "
+        f"regenerate")
+
+    got = golden_regen.run_fixture(name)
+    for group in ("metrics", "evals"):
+        assert sorted(got[group]) == sorted(want[group]), (
+            f"{name}: {group} keys changed: {sorted(got[group])} vs "
+            f"{sorted(want[group])}; {REGEN_HINT}")
+        for key in want[group]:
+            assert len(got[group][key]) == len(want[group][key]), (
+                f"{name}: {group}[{key}] length changed "
+                f"({len(got[group][key])} vs {len(want[group][key])}); "
+                f"{REGEN_HINT}")
+            for t, (g, w) in enumerate(zip(got[group][key],
+                                           want[group][key])):
+                assert g == w, (
+                    f"{name}: {group}[{key}][{t}] drifted: "
+                    f"{got[group + '_approx'][key][t]} != "
+                    f"{want[group + '_approx'][key][t]}; {REGEN_HINT}")
+    assert got["n_params"] == want["n_params"], f"{name}: {REGEN_HINT}"
+    if got["final_params_hex"] != want["final_params_hex"]:
+        g = np.frombuffer(bytes.fromhex(got["final_params_hex"]), np.float32)
+        w = np.frombuffer(bytes.fromhex(want["final_params_hex"]),
+                          np.float32)
+        bad = int((g != w).sum())
+        raise AssertionError(
+            f"{name}: final params drifted in {bad}/{g.size} scalars "
+            f"(max abs diff {np.abs(g - w).max():.3e}); {REGEN_HINT}")

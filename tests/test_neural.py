@@ -1,0 +1,251 @@
+"""Engine-native neural FedZO tasks (DESIGN.md §11).
+
+The differential matrix the bridge must satisfy, for every registered
+model track (softmax regression, the trainable LeNet-style SmallCNN, the
+tiny transformer head):
+
+- host loop ≡ engine, BITWISE, across the aggregation paths — the
+  {flat_params, weight_by_size, channel_schedule} flag cube on softmax,
+  spot combinations on the conv/transformer tracks (both drivers share one
+  round step and one key chain, so equality is exact, not approximate);
+- sharded (1-device clients mesh) ≡ unsharded round to ~1 ulp;
+- the batched-direction (wide) phase ≡ the loop estimator's trajectory
+  under direction_conv="tree";
+- the in-scan top-1 accuracy eval lands on the right rounds and the
+  softmax track actually trains.
+
+Plus the slow-marked full paper-figure grids (benchmarks/paper_figures.py)
+with their qualitative-ordering acceptance.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sim
+from repro.core import fedzo
+from repro.fed.server import FedServer
+from repro.workloads import neural
+
+BR = 4  # small kernel blocks for CPU interpret mode
+
+TASK_KW = {
+    "softmax": dict(n_train=240, n_test=64, n_clients=6, n_features=24,
+                    n_classes=4),
+    "cnn": dict(n_train=180, n_test=48, n_clients=6, n_classes=4,
+                image_shape=(10, 10, 1), width=4),
+    "transformer": dict(n_train=180, n_test=48, n_clients=6, n_features=24,
+                        n_classes=4, n_patches=4, d_model=16, d_ff=32,
+                        n_heads=2),
+}
+
+
+def _task(name):
+    return neural.make_task(name, **TASK_KW[name])
+
+
+def _cfg(task, **kw):
+    base = dict(n_participating=3, local_iters=2, b1=6, b2=3, lr=2e-2,
+                mu=1e-3, seed=7, weight_by_size=False)
+    base.update(kw)
+    return neural.default_config(task, **base)
+
+
+def _flag_kw(flat, weighted, sched):
+    kw = {}
+    if flat:
+        kw.update(flat_params=True, flat_block_rows=BR)
+    if weighted:
+        kw.update(weight_by_size=True)
+    if sched:
+        kw.update(aircomp=True, snr_db=10.0, channel_schedule=True)
+    return kw
+
+
+def _assert_trees_bitequal(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# host ≡ engine, bitwise, across the aggregation-path flag cube
+
+
+# softmax sweeps the full {flat_params, weight_by_size, channel_schedule}
+# cube; the heavier conv/transformer tracks pin the corners (plain, flat,
+# everything-on) so the matrix stays CI-sized
+CASES = [("softmax",) + flags
+         for flags in itertools.product((False, True), repeat=3)]
+CASES += [("cnn", False, False, False), ("cnn", True, True, True),
+          ("transformer", False, False, False),
+          ("transformer", True, True, True)]
+
+
+@pytest.mark.parametrize("model,flat,weighted,sched", CASES)
+def test_host_bitmatches_engine(model, flat, weighted, sched):
+    """3 host-driven rounds == 3 in-scan rounds, bit for bit, for every
+    neural track × aggregation path."""
+    task = _task(model)
+    cfg = _cfg(task, **_flag_kw(flat, weighted, sched))
+    p0 = neural.params_init(task, cfg.seed)
+    host = FedServer(task.loss, p0, task.clients, cfg, store=task.store)
+    for t in range(3):
+        host.run_round(t)
+    scanned = FedServer(task.loss, p0, task.clients, cfg, store=task.store)
+    scanned.run(3)
+    _assert_trees_bitequal(host.params, scanned.params)
+    for hm, sm in zip(host.history, scanned.history):
+        assert hm["mean_local_loss"] == sm["mean_local_loss"], (hm, sm)
+
+
+def test_wide_engine_bitmatches_host():
+    """The engine's fast execution plan (wide phases, rbg PRNG) also stays
+    host ≡ engine on a neural conv task."""
+    task = _task("cnn")
+    cfg = sim.fast_sim_config(_cfg(task))
+    p0 = neural.params_init(task, cfg.seed)
+    host = FedServer(task.loss, p0, task.clients, cfg, store=task.store)
+    for t in range(2):
+        host.run_round(t)
+    scanned = FedServer(task.loss, p0, task.clients, cfg, store=task.store)
+    scanned.run(2)
+    _assert_trees_bitequal(host.params, scanned.params)
+
+
+# ---------------------------------------------------------------------------
+# sharded (1-device mesh) ≡ unsharded round
+
+
+@pytest.mark.parametrize("model", ["softmax", "cnn", "transformer"])
+def test_sharded_round_matches_unsharded(model):
+    """The clients-mesh round on a 1-device mesh equals the plain round to
+    ~1 ulp for every neural track (psum changes XLA fusion, not math)."""
+    task = _task(model)
+    cfg = _cfg(task, batch_directions=True, direction_conv="block")
+    p0 = neural.params_init(task, cfg.seed)
+    mesh = sim.make_clients_mesh()
+    rf = sim.make_sharded_round(task.loss, cfg, mesh)
+    batches = sim.sample_batches(task.store, jnp.arange(3), jax.random.key(2),
+                                 cfg.local_iters, cfg.b1)
+    rngs = jax.random.split(jax.random.key(1), 3)
+    kc = jax.random.key(3)
+    ref = jax.jit(lambda p, b, r, c: fedzo.round_simulated(
+        task.loss, p, b, r, cfg, channel_rng=c))(p0, batches, rngs, kc)
+    got = jax.jit(lambda p, b, r, c: rf(
+        task.loss, p, b, r, cfg, channel_rng=c))(p0, batches, rngs, kc)
+    for la, lb in zip(jax.tree.leaves(ref[0]), jax.tree.leaves(got[0])):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=1e-6, rtol=1e-5)
+
+
+def test_sharded_experiment_inside_engine():
+    """neural.run(mesh=...) drives a whole sharded experiment as one scan
+    and matches the unsharded engine on a 1-device mesh."""
+    task = _task("softmax")
+    cfg = _cfg(task, batch_directions=True, direction_conv="block")
+    mesh = sim.make_clients_mesh()
+    res_s = neural.run(task, cfg, 3, mesh=mesh, donate=False)
+    res_u = neural.run(task, cfg, 3, donate=False)
+    for la, lb in zip(jax.tree.leaves(res_s.params),
+                      jax.tree.leaves(res_u.params)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=1e-6, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# wide (batched-direction) phase ≡ loop estimator on a neural task
+
+
+def test_wide_phase_matches_loop_on_cnn():
+    """direction_conv="tree" makes the wide phase walk the loop estimator's
+    exact directions through the conv net — one round agrees to the fp32
+    reassociation of the batched forwards."""
+    task = _task("cnn")
+    cfg_loop = _cfg(task)
+    cfg_wide = dataclasses.replace(cfg_loop, batch_directions=True)
+    p0 = neural.params_init(task, cfg_loop.seed)
+    batches = sim.sample_batches(task.store, jnp.arange(3), jax.random.key(5),
+                                 cfg_loop.local_iters, cfg_loop.b1)
+    rngs = jax.random.split(jax.random.key(6), 3)
+    p_l, m_l = fedzo.round_simulated(task.loss, p0, batches, rngs, cfg_loop)
+    p_w, m_w = fedzo.round_simulated(task.loss, p0, batches, rngs, cfg_wide)
+    np.testing.assert_allclose(float(m_w["mean_local_loss"]),
+                               float(m_l["mean_local_loss"]), rtol=1e-5)
+    for la, lb in zip(jax.tree.leaves(p_l), jax.tree.leaves(p_w)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# training + eval behavior
+
+
+def test_softmax_trains_with_in_scan_accuracy():
+    """The bridge actually optimizes: softmax test accuracy improves over
+    an 8-round engine run, and evals land on the configured cadence."""
+    task = _task("softmax")
+    cfg = _cfg(task, lr=5e-2, b2=8, n_participating=4)
+    res = neural.run(task, cfg, 8, eval_every=2, eval_rows=64)
+    hist = sim.history(res)
+    assert [h["round"] for h in hist] == list(range(8))
+    evs = [(h["round"], h["test_acc"]) for h in hist if "test_acc" in h]
+    assert [r for r, _ in evs] == [0, 2, 4, 6]
+    assert all(0.0 <= a <= 1.0 for _, a in evs)
+    assert evs[-1][1] > evs[0][1]
+    assert hist[-1]["mean_local_loss"] < hist[0]["mean_local_loss"]
+
+
+def test_make_task_validates_name_and_patching():
+    with pytest.raises(ValueError, match="unknown neural task"):
+        neural.make_task("mlp")
+    with pytest.raises(ValueError, match="patch tokens"):
+        neural.make_task("transformer", n_features=30, n_patches=4,
+                         n_train=40, n_test=8, n_clients=2)
+
+
+def test_make_task_rejects_unknown_model_kwargs():
+    """A misspelled model kwarg must fail loudly, not silently build (and
+    lru-cache) a default-model task."""
+    with pytest.raises(ValueError, match="unknown model kwargs"):
+        neural.make_task("cnn", widht=4, n_train=40, n_test=8, n_clients=2)
+    with pytest.raises(ValueError, match="unknown model kwargs"):
+        neural.make_task("softmax", image_shape=(8, 8, 1), n_train=40,
+                         n_test=8, n_clients=2)
+
+
+def test_make_task_accepts_list_image_shape():
+    """image_shape is normalized before the cache layer — a list must hit
+    the same cache slot as the equivalent tuple, not crash lru_cache."""
+    kw = dict(TASK_KW["cnn"])
+    as_tuple = neural.make_task("cnn", **kw)
+    kw["image_shape"] = list(kw["image_shape"])
+    assert neural.make_task("cnn", **kw) is as_tuple
+
+
+# ---------------------------------------------------------------------------
+# full paper-figure grids (slow job)
+
+
+@pytest.mark.slow
+def test_paper_figures_full_grid(tmp_path):
+    """The full-scale figure grids reproduce the paper's qualitative
+    orderings: larger H and larger M converge faster at equal rounds, lower
+    SNR degrades AirComp convergence."""
+    from benchmarks.paper_figures import run_figures
+
+    rows = dict((name, val) for name, _, val in
+                run_figures("softmax", smoke=False, outdir=str(tmp_path)))
+    assert rows["fig1/fedzo_trains"] == 1.0, rows
+    assert rows["fig2/larger_H_converges_faster"] == 1.0, rows
+    assert rows["fig3/larger_M_converges_faster"] == 1.0, rows
+    assert rows["fig4/lower_SNR_degrades_aircomp"] == 1.0, rows
+    assert rows["table1/monotone_in_MH"] == 1.0, rows
+    csvs = list(tmp_path.glob("*.csv"))
+    assert len(csvs) == 5
+    for p in csvs:
+        assert p.read_text().startswith("scenario,round,metric,value")

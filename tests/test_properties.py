@@ -1,0 +1,143 @@
+"""Property-based invariants (hypothesis via the tests/_hyp shim).
+
+- ``FlatParams`` flatten/unflatten is a bit-exact round trip over arbitrary
+  pytrees: mixed dtypes (f32, bf16, int32), scalar leaves, empty leaves,
+  nested containers; the buffer geometry (d, n_pad, zeroed pad region)
+  always matches the spec.
+- Partitioner invariants: every dataset row is assigned to EXACTLY one
+  client, client sizes sum to n, and every client gets ≥ 1 row — for the
+  Dirichlet label-skew split, the label-sorted shard deal, and the
+  uneven/iid random partitions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from _hyp import hypothesis, st
+
+from repro.data.synthetic import (dirichlet_partition, noniid_shards,
+                                  random_partition)
+from repro.utils.flatparams import flat_spec, flatten, unflatten
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=10,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# FlatParams round trip
+
+
+_SHAPES = [(), (0,), (1,), (3,), (2, 3), (1, 4, 2), (7,), (2, 0, 3)]
+
+
+def _random_pytree(seed: int, n_leaves: int):
+    """Arbitrary nested pytree: mixed dtypes incl. scalars + empty leaves."""
+    rng = np.random.default_rng(seed)
+    leaves = []
+    for _ in range(n_leaves):
+        shp = _SHAPES[int(rng.integers(0, len(_SHAPES)))]
+        kind = int(rng.integers(0, 3))
+        if kind == 0:
+            leaf = jnp.asarray(rng.normal(size=shp), jnp.float32)
+        elif kind == 1:
+            # bf16 values are exactly representable in f32, so the buffer
+            # cast round-trips bit-exactly
+            leaf = jnp.asarray(rng.normal(size=shp),
+                               jnp.float32).astype(jnp.bfloat16)
+        else:
+            # |v| < 2^24 survives the int32 → f32 → int32 cast exactly
+            leaf = jnp.asarray(rng.integers(-10_000, 10_000, shp), jnp.int32)
+        leaves.append(leaf)
+    # alternate container kinds so treedefs vary, not just leaf lists
+    tree = {"head": leaves[0]}
+    if len(leaves) > 1:
+        tree["rest"] = leaves[1:]
+    if len(leaves) > 3:
+        tree["nested"] = {"pair": (leaves[2], leaves[3])}
+    return tree
+
+
+@hypothesis.given(st.integers(0, 10_000), st.integers(1, 6))
+def test_flatparams_roundtrip_bitexact(seed, n_leaves):
+    params = _random_pytree(seed, n_leaves)
+    spec = flat_spec(params, block=8)
+    buf = flatten(params, spec)
+    assert buf.shape == (spec.n_pad,)
+    assert spec.d == sum(int(np.prod(s)) for s in spec.shapes)
+    assert spec.n_pad % 8 == 0 and spec.n_pad >= spec.d
+    # pad region is zero (the kernels stream it; garbage would leak into
+    # masked reductions)
+    assert not np.asarray(buf[spec.d:]).any()
+    back = unflatten(buf, spec)
+    la, lb = jax.tree.leaves(params), jax.tree.leaves(back)
+    assert jax.tree.structure(params) == jax.tree.structure(back)
+    for a, b in zip(la, lb):
+        assert a.shape == b.shape and a.dtype == b.dtype, (a, b)
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+@hypothesis.given(st.integers(0, 1000))
+def test_flatparams_scalar_offsets_follow_traversal_order(seed):
+    """The flat index of a scalar is its offset in leaf-traversal order —
+    the contract the counter direction convention is keyed on."""
+    params = _random_pytree(seed, 4)
+    spec = flat_spec(params, block=8)
+    buf = np.asarray(flatten(params, spec))
+    off = 0
+    for leaf in jax.tree.leaves(params):
+        flat = np.asarray(leaf, np.float32).ravel()
+        np.testing.assert_array_equal(buf[off:off + flat.size], flat)
+        off += flat.size
+    assert off == spec.d
+
+
+# ---------------------------------------------------------------------------
+# partitioner invariants
+
+
+def _check_partition(clients, n, n_clients):
+    sizes = [len(c["y"]) for c in clients]
+    assert len(clients) == n_clients
+    assert min(sizes) >= 1
+    assert sum(sizes) == n
+    # every row exactly once: the x column carries a unique row id
+    ids = np.sort(np.concatenate([c["x"][:, 0].astype(np.int64)
+                                  for c in clients]))
+    np.testing.assert_array_equal(ids, np.arange(n))
+
+
+def _id_problem(n, n_classes, seed):
+    x = np.arange(n, dtype=np.float32)[:, None]   # row id as the feature
+    y = (np.random.default_rng(seed).integers(0, n_classes, n)
+         .astype(np.int32))
+    return x, y
+
+
+@hypothesis.given(st.integers(2, 12), st.integers(0, 1000),
+                  st.floats(0.05, 5.0))
+def test_dirichlet_partition_invariants(n_clients, seed, alpha):
+    n = n_clients + int(seed) % 70
+    x, y = _id_problem(n, 4, seed)
+    _check_partition(dirichlet_partition(x, y, n_clients, alpha=alpha,
+                                         seed=seed), n, n_clients)
+
+
+@hypothesis.given(st.integers(2, 12), st.integers(0, 1000))
+def test_random_partition_invariants(n_clients, seed):
+    n = n_clients + int(seed) % 70
+    x, y = _id_problem(n, 4, seed)
+    for uneven in (False, True):
+        _check_partition(random_partition(x, y, n_clients, seed=seed,
+                                          uneven=uneven), n, n_clients)
+
+
+@hypothesis.given(st.integers(2, 10), st.integers(0, 1000))
+def test_noniid_shards_invariants(n_clients, seed):
+    n = 2 * n_clients + int(seed) % 70
+    x, y = _id_problem(n, 3, seed)
+    _check_partition(noniid_shards(x, y, n_clients, seed=seed), n, n_clients)
