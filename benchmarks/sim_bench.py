@@ -70,10 +70,10 @@ R = 10
 fn = sim.make_experiment_fn(softmax_loss, cfg, R, round_fn=rf, donate=False)
 key = sim.experiment_key(cfg)
 p = softmax_init(None)
-out = fn(p, None, key, store)
+out = fn(p, None, key, None, store)
 jax.block_until_ready(out[0])
 t0 = time.perf_counter()
-out = fn(p, None, key, store)
+out = fn(p, None, key, None, store)
 jax.block_until_ready(out[0])
 print("US_PER_ROUND", (time.perf_counter() - t0) / R * 1e6)
 """
@@ -117,10 +117,10 @@ def run():
     fn = sim.make_experiment_fn(softmax_loss, fcfg, ROUNDS, donate=False)
     key = sim.experiment_key(fcfg)
     p0 = softmax_init(None)
-    out = fn(p0, None, key, store)                    # compile
+    out = fn(p0, None, key, None, store)              # compile
     jax.block_until_ready(out[0])
     t0 = time.perf_counter()
-    out = fn(p0, None, key, store)
+    out = fn(p0, None, key, None, store)
     jax.block_until_ready(out[0])
     eng_us = (time.perf_counter() - t0) / ROUNDS * 1e6
     rows.append(("sim/engine_us_per_round", eng_us, ROUNDS))
@@ -129,13 +129,29 @@ def run():
     # -- engine scanning the UNCHANGED loop-estimator round -------------------
     r_loop = max(2, ROUNDS // 10)
     fn2 = sim.make_experiment_fn(softmax_loss, cfg, r_loop, donate=False)
-    out = fn2(p0, None, sim.experiment_key(cfg), store)
+    out = fn2(p0, None, sim.experiment_key(cfg), None, store)
     jax.block_until_ready(out[0])
     t0 = time.perf_counter()
-    out = fn2(p0, None, sim.experiment_key(cfg), store)
+    out = fn2(p0, None, sim.experiment_key(cfg), None, store)
     jax.block_until_ready(out[0])
     rows.append(("sim/engine_loop_est_us_per_round",
                  (time.perf_counter() - t0) / r_loop * 1e6, r_loop))
+
+    # -- fault-injection layer overhead (acceptance: <5% on rounds/s) ---------
+    faults = sim.FaultModel(p_fail=0.05, p_recover=0.4, deadline=2.0,
+                            p_corrupt=0.02)
+    fstate = faults.init_state(store.n_clients)
+    fnf = sim.make_experiment_fn(softmax_loss, fcfg, ROUNDS, faults=faults,
+                                 donate=False)
+    out = fnf(p0, None, key, fstate, store)           # compile
+    jax.block_until_ready(out[0])
+    t0 = time.perf_counter()
+    out = fnf(p0, None, key, fstate, store)
+    jax.block_until_ready(out[0])
+    faults_us = (time.perf_counter() - t0) / ROUNDS * 1e6
+    rows.append(("sim/engine_faults_us_per_round", faults_us, ROUNDS))
+    rows.append(("sim/faults_overhead_pct", 0.0,
+                 (faults_us / eng_us - 1.0) * 100.0))
 
     # -- device scaling of the sharded round ----------------------------------
     dev_counts = [1] + ([2] if (os.cpu_count() or 1) >= 2 else [])

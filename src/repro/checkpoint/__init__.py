@@ -1,0 +1,7 @@
+"""Durable checkpointing: single-snapshot params + full-carry run state."""
+from repro.checkpoint.checkpoint import (config_hash, latest_run_state,
+                                         restore, restore_run_state, save,
+                                         save_run_state)
+
+__all__ = ["config_hash", "latest_run_state", "restore", "restore_run_state",
+           "save", "save_run_state"]

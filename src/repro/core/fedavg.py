@@ -24,14 +24,17 @@ def local_phase(loss_fn, params, batches, cfg: FedZOConfig):
 
 
 def round_simulated(loss_fn, server_params, client_batches, cfg: FedZOConfig,
-                    *, channel_rng=None, weights=None):
+                    *, channel_rng=None, weights=None, faults=None):
     """One FedAvg round over M clients (batches leading axes [M, H, ...]).
 
     Honors the same channel-truncation scheduling as the FedZO round
     (cfg.channel_schedule): masked clients are excluded from the mean and
     Δ_max, m_effective lands in the metrics. ``weights`` ([M] mean-1
     normalized) selects the size-weighted n_i/n mean — the original
-    FedAvg aggregation — on every path.
+    FedAvg aggregation — on every path. ``faults`` (a
+    ``sim.faults.RoundFaults``) corrupts-then-scrubs the deltas and folds
+    the surviving-client mask into the aggregation, same semantics as the
+    FedZO round (DESIGN.md §12).
     """
     def one_client(batches):
         p_fin, losses = local_phase(loss_fn, server_params, batches, cfg)
@@ -45,6 +48,9 @@ def round_simulated(loss_fn, server_params, client_batches, cfg: FedZOConfig,
     if cfg.channel_schedule and channel_rng is not None:
         k_sched, noise_rng = jax.random.split(channel_rng)
         _, mask = schedule_by_channel(k_sched, M, cfg.h_min)
+    if faults is not None:
+        deltas, fmask = faults.apply_tree(deltas)
+        mask = fmask if mask is None else mask & fmask
     if cfg.aircomp and channel_rng is not None:
         agg, stats = aircomp_aggregate(deltas, noise_rng, snr_db=cfg.snr_db,
                                        h_min=cfg.h_min, mask=mask,
@@ -58,6 +64,8 @@ def round_simulated(loss_fn, server_params, client_batches, cfg: FedZOConfig,
     else:
         agg = tree_scale(1.0 / M,
                          jax.tree.map(lambda x: jnp.sum(x, 0), deltas))
+    if faults is not None:
+        stats["m_corrupt"] = faults.n_corrupt
     return tree_add(server_params, agg), {"mean_local_loss": jnp.mean(losses),
                                           **stats}
 

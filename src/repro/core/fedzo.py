@@ -203,7 +203,7 @@ def client_delta(loss_fn, params, batches, rng, cfg) -> tuple:
 
 def round_simulated(loss_fn, server_params, client_batches, client_rngs,
                     cfg: FedZOConfig, *, channel_rng=None, momentum=None,
-                    weights=None):
+                    weights=None, faults=None):
     """One full communication round over the M sampled clients (vmapped).
 
     client_batches: pytree with leading [M, H, ...] axes.
@@ -228,6 +228,12 @@ def round_simulated(loss_fn, server_params, client_batches, client_rngs,
     switches every aggregation path to the FedAvg-style size-weighted mean
     n_i/n over the (scheduled) clients; the engine threads it from
     ``ClientStore.sizes`` under ``cfg.weight_by_size``.
+
+    ``faults`` (a ``sim.faults.RoundFaults``) injects this round's realized
+    client faults: the deltas are corrupted-then-scrubbed before
+    aggregation and the surviving-client mask composes with the channel
+    mask, so dropped/straggling/poisoned clients are excluded from the
+    mean and Δ_max exactly like channel-masked ones (DESIGN.md §12).
     """
     M = client_rngs.shape[0]
     mask = None
@@ -258,6 +264,10 @@ def round_simulated(loss_fn, server_params, client_batches, client_rngs,
 
         deltas, losses = jax.vmap(one_client)(client_batches, keys)
 
+        if faults is not None:
+            deltas, fmask = faults.apply_flat(deltas)
+            mask = fmask if mask is None else mask & fmask
+
         if cfg.aircomp and channel_rng is not None:
             agg_flat, air_stats = aircomp_aggregate_flat(
                 deltas, noise_rng, snr_db=cfg.snr_db, h_min=cfg.h_min,
@@ -276,6 +286,10 @@ def round_simulated(loss_fn, server_params, client_batches, client_rngs,
             return delta, res.losses
 
         deltas, losses = jax.vmap(one_client)(client_batches, client_rngs)
+
+        if faults is not None:
+            deltas, fmask = faults.apply_tree(deltas)
+            mask = fmask if mask is None else mask & fmask
 
         if cfg.aircomp and channel_rng is not None:
             agg, air_stats = aircomp_aggregate(
@@ -298,6 +312,10 @@ def round_simulated(loss_fn, server_params, client_batches, client_rngs,
             momentum, agg)
         agg = momentum
     new_params = tree_add(server_params, agg)
+    if faults is not None:
+        # mask is never None under faults, so every branch above reported
+        # m_effective (the surviving cohort); add the poison count
+        air_stats["m_corrupt"] = faults.n_corrupt
     metrics = {"mean_local_loss": jnp.mean(losses),
                "first_loss": jnp.mean(losses[:, 0]), **air_stats}
     if momentum is not None:

@@ -18,7 +18,7 @@ Two drivers share the class:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Callable, Optional
 
 import jax
@@ -28,6 +28,7 @@ import numpy as np
 from repro.configs.base import FedZOConfig
 from repro.core import aircomp, fedavg, fedzo, seedcomm
 from repro.data.synthetic import sample_local_batches
+from repro.sim.faults import DivergenceError, FaultModel
 from repro.utils.tree import tree_add, tree_bytes, tree_zeros_like
 
 
@@ -43,11 +44,19 @@ class FedServer:
     store: Optional[object] = None       # sim.ClientStore → engine driver
     jit_eval: Optional[Callable] = None  # jit-traceable, runs in-scan
     eval_every: int = 1                  # engine eval cadence (rounds)
+    faults: Optional[FaultModel] = None  # in-jit fault injection (§12)
+    divergence_guard: bool = False       # roll back non-finite rounds
+    max_retries: int = 3                 # lr-backoff retries before failing
+    lr_backoff: float = 0.5              # lr multiplier per rollback
 
     def __post_init__(self):
         if self.clients is None and self.store is None:
             raise ValueError("FedServer needs client datasets: pass "
                              "clients=[...] and/or store=ClientStore")
+        if self.faults is not None and self.store is None:
+            raise ValueError("fault injection runs inside the jitted round "
+                             "step — construct the FedServer with a "
+                             "store=ClientStore")
         n = (len(self.clients) if self.clients is not None
              else self.store.n_clients)
         if n != self.cfg.n_devices:
@@ -62,7 +71,11 @@ class FedServer:
                 f"the federation size N={n}")
         self._np_rng = np.random.default_rng(self.cfg.seed)
         self._momentum = None
-        self._exp_cache = {}
+        self._retries = 0
+        # successful-round counter: history NUMBERING must not derive from
+        # len(self.history) — structured event rows (rollbacks) land in the
+        # history too and must not shift round numbers
+        self._round_idx = 0
         # jit once for the host-driven rounds; the scan engine traces the
         # raw fn in-scan (wrapping there would be a no-op)
         self._jit_eval = (jax.jit(self.jit_eval)
@@ -71,13 +84,25 @@ class FedServer:
             # momentum state lives on the server and threads through
             # every round (round_simulated returns the updated state)
             self._momentum = tree_zeros_like(self.params)
+        self._fstate = (self.faults.init_state(n)
+                        if self.faults is not None else None)
         if self.store is not None:
             from repro.sim import engine as sim_engine
             self._key = sim_engine.experiment_key(self.cfg)
+        else:
+            self._key = jax.random.key(self.cfg.seed)
+        self._build_round_fns()
+
+    def _build_round_fns(self):
+        """(Re)build the jitted per-round programs for the CURRENT
+        ``self.cfg`` — called at init and again after a divergence
+        rollback bakes a backed-off lr into the config."""
+        self._exp_cache = {}
+        if self.store is not None:
+            from repro.sim import engine as sim_engine
             self._sim_step = jax.jit(sim_engine.make_round_step(
-                self.loss_fn, self.cfg, algo=self.algo))
+                self.loss_fn, self.cfg, algo=self.algo, faults=self.faults))
             return
-        self._key = jax.random.key(self.cfg.seed)
         # ``w`` is the size-weight vector (None unless cfg.weight_by_size —
         # None is an empty pytree, so the unweighted jit signature is
         # unchanged)
@@ -112,11 +137,14 @@ class FedServer:
         return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
 
     # -- round ---------------------------------------------------------------
-    def run_round(self, t: int):
+    def _step_once(self):
+        """Advance one round (store/engine step or host loop) and return
+        the fetched metrics dict."""
         if self.store is not None:
             state, metrics = self._sim_step(
-                (self.params, self._momentum, self._key), self.store)
-            self.params, self._momentum, self._key = state
+                (self.params, self._momentum, self._key, self._fstate),
+                self.store)
+            self.params, self._momentum, self._key, self._fstate = state
         else:
             chosen = self.sample_clients()
             batches = self._stack_batches(chosen)
@@ -140,14 +168,48 @@ class FedServer:
                 self.params, metrics = self._round(self.params, batches, kc,
                                                    weights)
         # ONE host sync for the whole metrics dict, not one per metric
-        metrics = {k: float(v) for k, v in jax.device_get(metrics).items()}
-        metrics["round"] = t
-        ev = self.eval_fn or (
-            self._jit_eval and (lambda p: {
-                k: float(v)
-                for k, v in jax.device_get(self._jit_eval(p)).items()}))
-        if ev:
-            metrics.update(ev(self.params))
+        return {k: float(v) for k, v in jax.device_get(metrics).items()}
+
+    def _diverged(self, metrics: dict) -> bool:
+        if any(not np.isfinite(v) for v in metrics.values()
+               if isinstance(v, float)):
+            return True
+        return any(not np.all(np.isfinite(leaf))
+                   for leaf in jax.device_get(jax.tree.leaves(self.params)))
+
+    def run_round(self, t: Optional[int] = None):
+        """Run one round (numbered ``t``, default the internal successful-
+        round counter). With ``divergence_guard`` a round whose metrics,
+        eval, or params come back non-finite is ROLLED BACK: the pre-round
+        state is restored, the lr is scaled by ``lr_backoff`` (jitted
+        programs rebuilt), a structured ``{"round": t, "event":
+        "rollback", ...}`` row lands in the history, and the round is
+        retried — at most ``max_retries`` consecutive times, then
+        ``DivergenceError``."""
+        if t is None:
+            t = self._round_idx
+        while True:
+            snap = (self.params, self._momentum, self._key, self._fstate)
+            metrics = self._step_once()
+            metrics["round"] = t
+            ev = self.eval_fn or (
+                self._jit_eval and (lambda p: {
+                    k: float(v)
+                    for k, v in jax.device_get(self._jit_eval(p)).items()}))
+            if ev:
+                metrics.update(ev(self.params))
+            if not self.divergence_guard or not self._diverged(metrics):
+                break
+            self.params, self._momentum, self._key, self._fstate = snap
+            self._retries += 1
+            if self._retries > self.max_retries:
+                raise DivergenceError(t, self.max_retries, self.cfg.lr)
+            self.cfg = replace(self.cfg, lr=self.cfg.lr * self.lr_backoff)
+            self._build_round_fns()
+            self.history.append({"round": t, "event": "rollback",
+                                 "retry": self._retries, "lr": self.cfg.lr})
+        self._retries = 0
+        self._round_idx = t + 1
         self.history.append(metrics)
         return metrics
 
@@ -172,7 +234,7 @@ class FedServer:
                 log(i, m)
         else:
             for i in range(rounds):
-                log(i, self.run_round(len(self.history)))
+                log(i, self.run_round())
         return self.history
 
     def _run_scanned(self, rounds: int):
@@ -185,16 +247,29 @@ class FedServer:
             fn = sim_engine.make_experiment_fn(
                 self.loss_fn, self.cfg, rounds, algo=self.algo,
                 eval_fn=self.jit_eval, eval_every=self.eval_every,
-                donate=False)
+                faults=self.faults, donate=False)
             self._exp_cache[rounds] = fn
-        self.params, self._momentum, self._key, ring, ebuf = fn(
-            self.params, self._momentum, self._key, self.store)
+        (self.params, self._momentum, self._key, self._fstate, ring,
+         ebuf) = fn(self.params, self._momentum, self._key, self._fstate,
+                    self.store)
         res = sim_engine.ExperimentResult(
             params=self.params, momentum=self._momentum, key=self._key,
             metrics=ring, evals=ebuf, rounds=rounds, ring_size=rounds,
             eval_rounds=(np.arange(0, rounds, self.eval_every)
-                         if self.jit_eval is not None else np.arange(0)))
-        hist = sim_engine.history(res, start_round=len(self.history))
+                         if self.jit_eval is not None else np.arange(0)),
+            fault_state=self._fstate)
+        if self.divergence_guard and self._diverged(
+                {k: float(v[-1]) for k, v in
+                 jax.device_get(res.metrics).items()}):
+            # the one-program scan has no intermediate state to roll back
+            # to — fail structurally and point at the recoverable drivers
+            raise DivergenceError(
+                self._round_idx + rounds, 0, self.cfg.lr,
+                detail="the scanned driver has no per-round snapshots; use "
+                       "driver='host' or sim.run_experiment(..., "
+                       "checkpoint_every=k) for rollback recovery")
+        hist = sim_engine.history(res, start_round=self._round_idx)
+        self._round_idx += rounds
         self.history.extend(hist)
         return hist
 

@@ -6,6 +6,8 @@
   ring buffer, in-scan eval, donated carry).
 - ``shard``  — the round fanned out over a ``clients`` mesh axis.
 - ``sweep``  — vmapped scenario grids (one jit per static shape group).
+- ``faults`` — in-jit fault injection (availability chains, stragglers,
+  corrupted uploads) + the server-side finite-guard (DESIGN.md §12).
 """
 from __future__ import annotations
 
@@ -15,6 +17,7 @@ from repro.configs.base import FedZOConfig
 from repro.sim.engine import (ExperimentResult, experiment_key,
                               history, make_experiment_fn, make_round_step,
                               run_experiment)
+from repro.sim.faults import DivergenceError, FaultModel, RoundFaults
 from repro.sim.shard import make_clients_mesh, make_sharded_round
 from repro.sim.store import (ClientStore, build_store, sample_batches,
                              sample_participants)

@@ -18,14 +18,27 @@ so R in-jit rounds bit-match R host-driven rounds):
 local minibatches, ``k_zo`` the M per-client ZO keys, ``k_chan`` the
 channel realization. The chain starts at ``key(cfg.seed, impl=
 cfg.prng_impl)`` so a whole experiment is bit-reproducible from the config.
+With a ``FaultModel`` attached the split widens to 6 and the extra
+``k_fault`` stream drives the availability/straggler/corruption draws —
+fault-free runs keep the exact 5-way chain, so existing trajectories (and
+the golden fixtures) are untouched.
 
 Donation: the jitted program donates params, momentum, and the key, so at
 steady state the engine updates the model in place — no per-round
 host↔device traffic and no double-buffered parameter copies.
+
+Durability (DESIGN.md §12): ``run_experiment(..., checkpoint_every=k,
+checkpoint_dir=...)`` runs the same scan in k-round segments, paying ONE
+host sync + one atomic snapshot of the full carry (params, momentum, key,
+fault state, metrics ring, eval buffer, round index) per segment. A run
+killed between segments resumes bit-exactly (``resume=True``), and the
+per-segment sync doubles as the divergence guard: a non-finite carry rolls
+back to the last good snapshot with lr backoff, bounded by ``max_retries``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import dataclasses
+from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 import jax
@@ -34,6 +47,7 @@ import numpy as np
 
 from repro.configs.base import FedZOConfig
 from repro.core import aircomp, fedavg, fedzo
+from repro.sim.faults import DivergenceError, FaultModel
 from repro.sim.store import ClientStore, sample_batches, sample_participants
 from repro.utils.tree import tree_zeros_like
 
@@ -51,33 +65,45 @@ def experiment_key(cfg: FedZOConfig):
 
 
 def make_round_step(loss_fn, cfg: FedZOConfig, *, algo: str = "fedzo",
-                    round_fn=None) -> Callable:
+                    round_fn=None, faults: Optional[FaultModel] = None
+                    ) -> Callable:
     """One full communication round as a pure function
-    ``step((params, momentum, key), store) -> ((params', momentum', key'),
-    metrics)``.
+    ``step((params, momentum, key, fstate), store) ->
+    ((params', momentum', key', fstate'), metrics)``.
 
     THE round unit shared by the scan engine and by
     ``FedServer.run_round`` on the store path — sharing it is what makes
-    the two trajectories bit-identical. ``round_fn`` optionally replaces
+    the two trajectories bit-identical (under faults too: the fault draws
+    hang off the same carried key chain). ``round_fn`` optionally replaces
     ``fedzo.round_simulated`` with a signature-compatible deployment (the
-    clients-axis shard_map round of sim/shard.py).
+    clients-axis shard_map round of sim/shard.py). ``fstate`` is the fault
+    carry (the [N] Gilbert–Elliott availability states); None without a
+    ``faults`` model.
     """
     has_momentum = algo == "fedzo" and _static_positive(cfg.server_momentum)
     fz_round = round_fn if round_fn is not None else fedzo.round_simulated
     weigh = cfg.weight_by_size
 
     def step(state, store: ClientStore):
-        params, momentum, key = state
-        key, k_part, k_batch, k_zo, k_chan = round_keys(key)
+        params, momentum, key, fstate = state
+        if faults is not None:
+            key, k_part, k_batch, k_zo, k_chan, k_fault = \
+                jax.random.split(key, 6)
+        else:
+            key, k_part, k_batch, k_zo, k_chan = round_keys(key)
         idx = sample_participants(k_part, store.n_clients,
                                   cfg.n_participating)
         batches = sample_batches(store, idx, k_batch, cfg.local_iters,
                                  cfg.b1)
         # FedAvg-style n_i/n weights of the sampled clients (mean-1
         # normalized); only added to the round call when enabled so custom
-        # round_fns without a weights kwarg keep working
+        # round_fns without a weights kwarg keep working — the per-round
+        # fault realization rides the same pattern
         wkw = ({"weights": aircomp.size_weights(store.sizes[idx])}
                if weigh else {})
+        if faults is not None:
+            fstate, inj = faults.step(k_fault, fstate, idx)
+            wkw["faults"] = inj
         if algo == "fedavg":
             params, metrics = fedavg.round_simulated(
                 loss_fn, params, batches, cfg, channel_rng=k_chan, **wkw)
@@ -91,7 +117,7 @@ def make_round_step(loss_fn, cfg: FedZOConfig, *, algo: str = "fedzo",
                 params, metrics = fz_round(
                     loss_fn, params, batches, rngs, cfg, channel_rng=k_chan,
                     **wkw)
-        return (params, momentum, key), metrics
+        return (params, momentum, key, fstate), metrics
 
     return step
 
@@ -111,7 +137,9 @@ class ExperimentResult:
     """Host-side container for one engine run. ``metrics`` holds the ring
     buffer (dict of [ring_size] arrays, slot = round % ring_size);
     ``evals`` the in-scan eval outputs (dict of [n_evals] arrays), one slot
-    per eval round in ``eval_rounds``."""
+    per eval round in ``eval_rounds``. ``fault_state`` carries the final
+    [N] availability states when a ``FaultModel`` was attached; ``events``
+    holds structured host-side rows (divergence rollbacks)."""
     params: Any
     momentum: Any
     key: Any
@@ -120,6 +148,8 @@ class ExperimentResult:
     rounds: int
     ring_size: int
     eval_rounds: np.ndarray
+    fault_state: Any = None
+    events: list = field(default_factory=list)
 
     def recorded_rounds(self) -> np.ndarray:
         """Round numbers still present in the ring, oldest→newest."""
@@ -127,34 +157,66 @@ class ExperimentResult:
         return np.arange(start, self.rounds)
 
 
-def experiment_core(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
-                    rounds: int, key, momentum=None, *, algo: str = "fedzo",
-                    eval_fn=None, eval_every: int = 0, ring_size: int = 0,
-                    round_fn=None):
-    """The traceable experiment body: scan ``rounds`` round steps, ring-
-    buffer the metrics, eval in-scan every ``eval_every`` rounds. Returns
-    (params, momentum, key, metrics_ring, evals). Un-jitted so sweeps can
-    vmap it over a stacked config axis (sim/sweep.py)."""
-    ring_size = min(rounds, ring_size) if ring_size else rounds
-    step = make_round_step(loss_fn, cfg, algo=algo, round_fn=round_fn)
-    do_eval = eval_fn is not None and eval_every > 0
-    n_evals = (rounds + eval_every - 1) // eval_every if do_eval else 0
-
-    state0 = (params, momentum, key)
+def _zero_buffers(loss_fn, params, store, cfg, momentum, key, fstate, *,
+                  algo, round_fn, faults, eval_fn, ring_alloc, n_evals):
+    """Zero-initialized metrics ring + eval buffer with the dtypes the
+    round step / eval_fn will write — via ``jax.eval_shape``, so nothing
+    is executed. Shared by the single-shot scan and the segment runner (the
+    buffers must be identical for chunked ≡ single-shot bit-equality)."""
+    step = make_round_step(loss_fn, cfg, algo=algo, round_fn=round_fn,
+                           faults=faults)
+    state0 = (params, momentum, key, fstate)
     m_shapes = jax.eval_shape(lambda s: step(s, store)[1], state0)
-    ring0 = {k: jnp.zeros((ring_size,), v.dtype)
+    ring0 = {k: jnp.zeros((ring_alloc,), v.dtype)
              for k, v in m_shapes.items()}
-    if do_eval:
+    if eval_fn is not None and n_evals:
         e_shapes = jax.eval_shape(eval_fn, params)
         ebuf0 = {k: jnp.zeros((n_evals,), v.dtype)
                  for k, v in e_shapes.items()}
     else:
         ebuf0 = {}
+    return ring0, ebuf0
+
+
+def experiment_core(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
+                    rounds: int, key, momentum=None, *, algo: str = "fedzo",
+                    eval_fn=None, eval_every: int = 0, ring_size: int = 0,
+                    round_fn=None, faults: Optional[FaultModel] = None,
+                    fault_state=None, t0=0, total_rounds: int = 0,
+                    ring=None, ebuf=None):
+    """The traceable experiment body: scan ``rounds`` round steps, ring-
+    buffer the metrics, eval in-scan every ``eval_every`` rounds. Returns
+    (params, momentum, key, fault_state, metrics_ring, evals). Un-jitted so
+    sweeps can vmap it over a stacked config axis (sim/sweep.py).
+
+    Segment mode (the checkpointed runner): ``t0``/``total_rounds`` place
+    this scan as rounds [t0, t0+rounds) of a ``total_rounds``-round
+    experiment — the ring/eval buffers are sized (and slotted) against the
+    TOTAL, and partially-filled buffers are threaded back in via
+    ``ring``/``ebuf``, so k-round segments write exactly the cells the
+    uninterrupted scan would."""
+    total = total_rounds or rounds
+    ring_alloc = min(total, ring_size) if ring_size else total
+    step = make_round_step(loss_fn, cfg, algo=algo, round_fn=round_fn,
+                           faults=faults)
+    do_eval = eval_fn is not None and eval_every > 0
+    n_evals = (total + eval_every - 1) // eval_every if do_eval else 0
+
+    state0 = (params, momentum, key, fault_state)
+    if ring is None or (do_eval and ebuf is None):
+        ring0, ebuf0 = _zero_buffers(
+            loss_fn, params, store, cfg, momentum, key, fault_state,
+            algo=algo, round_fn=round_fn, faults=faults, eval_fn=eval_fn,
+            ring_alloc=ring_alloc, n_evals=n_evals)
+        ring = ring0 if ring is None else ring
+        ebuf = ebuf0 if ebuf is None else ebuf
+    elif ebuf is None:
+        ebuf = {}
 
     def body(carry, t):
         state, ring, ebuf = carry
         state, metrics = step(state, store)
-        slot = jnp.mod(t, ring_size)
+        slot = jnp.mod(t, ring_alloc)
         ring = {k: ring[k].at[slot].set(metrics[k].astype(ring[k].dtype))
                 for k in ring}
         if do_eval:
@@ -168,56 +230,256 @@ def experiment_core(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
                                 lambda args: args[0], (ebuf, state[0]))
         return (state, ring, ebuf), None
 
-    (state, ring, ebuf), _ = jax.lax.scan(
-        body, (state0, ring0, ebuf0), jnp.arange(rounds))
-    params, momentum, key = state
-    return params, momentum, key, ring, ebuf
+    ts = jnp.arange(rounds)
+    if not (isinstance(t0, int) and t0 == 0):
+        ts = ts + t0
+    (state, ring, ebuf), _ = jax.lax.scan(body, (state0, ring, ebuf), ts)
+    params, momentum, key, fault_state = state
+    return params, momentum, key, fault_state, ring, ebuf
 
 
 def make_experiment_fn(loss_fn, cfg: FedZOConfig, rounds: int, *,
                        algo: str = "fedzo", eval_fn=None, eval_every: int = 0,
-                       ring_size: int = 0, round_fn=None,
+                       ring_size: int = 0, round_fn=None, faults=None,
                        donate: bool = True) -> Callable:
     """Compile the whole experiment once: returns a jitted
-    ``fn(params, momentum, key, store) -> (params', momentum', key',
-    metrics_ring, evals)`` with params/momentum/key donated (pass
-    ``momentum=None`` when cfg.server_momentum is 0)."""
-    def fn(params, momentum, key, store):
+    ``fn(params, momentum, key, fstate, store) -> (params', momentum',
+    key', fstate', metrics_ring, evals)`` with the carry donated (pass
+    ``momentum=None`` when cfg.server_momentum is 0 and ``fstate=None``
+    without a fault model)."""
+    def fn(params, momentum, key, fstate, store):
         return experiment_core(loss_fn, params, store, cfg, rounds, key,
                                momentum, algo=algo, eval_fn=eval_fn,
                                eval_every=eval_every, ring_size=ring_size,
-                               round_fn=round_fn)
+                               round_fn=round_fn, faults=faults,
+                               fault_state=fstate)
 
-    return jax.jit(fn, donate_argnums=(0, 1, 2) if donate else ())
+    return jax.jit(fn, donate_argnums=(0, 1, 2, 3) if donate else ())
 
 
 def run_experiment(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
                    rounds: int, *, algo: str = "fedzo", eval_fn=None,
                    eval_every: int = 0, ring_size: int = 0, key=None,
-                   momentum=None, round_fn=None,
-                   donate: bool = True) -> ExperimentResult:
+                   momentum=None, round_fn=None, faults=None,
+                   donate: bool = True, checkpoint_every: int = 0,
+                   checkpoint_dir=None, resume: bool = False,
+                   max_segments=None, segment_callback=None,
+                   max_retries: int = 3,
+                   lr_backoff: float = 0.5) -> ExperimentResult:
     """Run a whole experiment inside ONE compiled program.
 
     ``eval_fn(params) -> dict of scalars`` must be jit-traceable; it runs
     in-scan every ``eval_every`` rounds. ``ring_size`` bounds the metrics
     buffer (0 keeps every round). With ``donate`` the caller's params /
     momentum / key buffers are consumed — reuse the returned ones.
+    ``faults`` attaches a ``sim.faults.FaultModel`` (DESIGN.md §12).
+
+    ``checkpoint_every=k`` (with ``checkpoint_dir``) switches to the
+    durable segment runner: the same scan in k-round chunks, one host sync
+    + one atomic full-carry snapshot per chunk, bit-identical to the
+    single-shot run. ``resume=True`` continues from the latest snapshot in
+    ``checkpoint_dir`` (fresh start when there is none). A segment whose
+    carry comes back non-finite rolls back to the last good snapshot with
+    the lr scaled by ``lr_backoff``, at most ``max_retries`` times, then
+    raises ``DivergenceError``. ``max_segments`` bounds the segments run
+    this call (for tests/preemption drills); ``segment_callback(round,
+    total)`` fires after every successful snapshot.
     """
     if key is None:
         key = experiment_key(cfg)
     if momentum is None and algo == "fedzo" and cfg.server_momentum > 0:
         momentum = tree_zeros_like(params)
+    fstate = faults.init_state(store.n_clients) if faults is not None else None
+    do_eval = eval_fn is not None and eval_every > 0
+    if checkpoint_every > 0:
+        return _run_checkpointed(
+            loss_fn, params, store, cfg, rounds, algo=algo, eval_fn=eval_fn,
+            eval_every=eval_every, ring_size=ring_size, key=key,
+            momentum=momentum, round_fn=round_fn, faults=faults,
+            fstate=fstate, donate=donate, checkpoint_every=checkpoint_every,
+            checkpoint_dir=checkpoint_dir, resume=resume,
+            max_segments=max_segments, segment_callback=segment_callback,
+            max_retries=max_retries, lr_backoff=lr_backoff)
     fn = make_experiment_fn(loss_fn, cfg, rounds, algo=algo, eval_fn=eval_fn,
                             eval_every=eval_every, ring_size=ring_size,
-                            round_fn=round_fn, donate=donate)
-    params, momentum, key, ring, ebuf = fn(params, momentum, key, store)
-    eval_rounds = (np.arange(0, rounds, eval_every)
-                   if (eval_fn is not None and eval_every > 0)
-                   else np.arange(0))
+                            round_fn=round_fn, faults=faults, donate=donate)
+    params, momentum, key, fstate, ring, ebuf = fn(params, momentum, key,
+                                                   fstate, store)
+    eval_rounds = np.arange(0, rounds, eval_every) if do_eval \
+        else np.arange(0)
     return ExperimentResult(params=params, momentum=momentum, key=key,
                             metrics=ring, evals=ebuf, rounds=rounds,
                             ring_size=min(rounds, ring_size) or rounds,
-                            eval_rounds=eval_rounds)
+                            eval_rounds=eval_rounds, fault_state=fstate)
+
+
+def _carry_to_state(params, momentum, key, fstate, ring, ebuf) -> dict:
+    """The durable form of the full experiment carry: one pytree whose
+    leaves are all plain arrays (the typed PRNG key is exported via
+    ``jax.random.key_data``; ``wrap_key_data`` re-types it on restore)."""
+    return {"params": params, "momentum": momentum,
+            "key": jax.random.key_data(key), "fstate": fstate,
+            "ring": ring, "ebuf": ebuf}
+
+
+def _state_to_carry(state: dict, cfg: FedZOConfig):
+    """Inverse of ``_carry_to_state``. Host numpy leaves are put back on
+    device here so the segment fn's donation always sees jax arrays."""
+    key = jax.random.wrap_key_data(jnp.asarray(state["key"]),
+                                   impl=cfg.prng_impl)
+    dev = [jax.tree.map(jnp.asarray, state[k])
+           for k in ("params", "momentum", "fstate", "ring", "ebuf")]
+    return (dev[0], dev[1], key, dev[2], dev[3], dev[4])
+
+
+def _finite_state(state: dict, rounds_done, ring_alloc, eval_every,
+                  do_eval) -> bool:
+    """Host-side divergence check on a fetched carry: every param leaf and
+    every metric/eval cell written by the rounds in ``rounds_done`` must be
+    finite. Boolean masks and counters pass through ``isfinite`` trivially,
+    so the check is a plain sweep over the written cells."""
+    for leaf in jax.tree.leaves(state["params"]):
+        if not np.all(np.isfinite(leaf)):
+            return False
+    slots = np.unique([t % ring_alloc for t in rounds_done])
+    for v in state["ring"].values():
+        if np.issubdtype(v.dtype, np.floating) and \
+                not np.all(np.isfinite(v[slots])):
+            return False
+    if do_eval:
+        eslots = np.unique([t // eval_every for t in rounds_done
+                            if t % eval_every == 0])
+        for v in state["ebuf"].values():
+            if eslots.size and np.issubdtype(v.dtype, np.floating) and \
+                    not np.all(np.isfinite(v[eslots])):
+                return False
+    return True
+
+
+def _run_checkpointed(loss_fn, params, store, cfg, rounds, *, algo, eval_fn,
+                      eval_every, ring_size, key, momentum, round_fn, faults,
+                      fstate, donate, checkpoint_every, checkpoint_dir,
+                      resume, max_segments, segment_callback, max_retries,
+                      lr_backoff) -> ExperimentResult:
+    """The durable segment loop behind ``run_experiment(...,
+    checkpoint_every=k)``. Invariants:
+
+    - **Bit-equality**: segments scan global round indices into buffers
+      sized against the total, so the chunked run writes exactly the cells
+      (and walks exactly the key chain) of the single-shot scan.
+    - **Durability**: the full carry is snapshotted atomically after every
+      segment (``checkpoint.save_run_state``: tmp dir + rename + LATEST
+      pointer swap), so a SIGKILL at ANY point leaves a consistent latest
+      snapshot; ``resume=True`` continues from it.
+    - **Recovery**: a non-finite post-segment carry rolls the run back to
+      the last good snapshot, scales lr by ``lr_backoff``, and retries —
+      at most ``max_retries`` times, then ``DivergenceError``. Every
+      rollback appends a structured ``{"round", "event": "rollback", ...}``
+      row to ``result.events`` (and the snapshot meta, so a resumed run
+      keeps the full recovery log).
+    """
+    from repro.checkpoint import checkpoint as ckpt
+
+    if checkpoint_dir is None:
+        raise ValueError("checkpoint_every > 0 requires checkpoint_dir")
+    do_eval = eval_fn is not None and eval_every > 0
+    ring_alloc = min(rounds, ring_size) if ring_size else rounds
+    n_evals = (rounds + eval_every - 1) // eval_every if do_eval else 0
+    orig_hash = ckpt.config_hash(cfg)
+
+    ring, ebuf = _zero_buffers(
+        loss_fn, params, store, cfg, momentum, key, fstate, algo=algo,
+        round_fn=round_fn, faults=faults, eval_fn=eval_fn,
+        ring_alloc=ring_alloc, n_evals=n_evals)
+
+    t, events, cur_lr = 0, [], cfg.lr
+    if resume:
+        snap = ckpt.latest_run_state(checkpoint_dir)
+        if snap is not None:
+            like = _carry_to_state(params, momentum, key, fstate, ring, ebuf)
+            state, meta = ckpt.restore_run_state(snap, like)
+            if meta.get("config_hash") not in (None, orig_hash):
+                import warnings
+                warnings.warn(
+                    f"resuming from a snapshot of a DIFFERENT config "
+                    f"(hash {meta.get('config_hash')} != {orig_hash}) — "
+                    f"the continued trajectory will not match either run")
+            t = int(meta["round"])
+            events = list(meta.get("events", []))
+            cur_lr = float(meta.get("lr", cfg.lr))
+            params, momentum, key, fstate, ring, ebuf = \
+                _state_to_carry(state, cfg)
+
+    def checkpoint_meta():
+        return {"round": t, "rounds_total": rounds, "algo": algo,
+                "config_hash": orig_hash, "lr": cur_lr, "events": events}
+
+    if t == 0:
+        # round-0 snapshot: the rollback anchor for a first-segment
+        # divergence (the donated pre-segment carry is gone by then)
+        state0 = jax.device_get(
+            _carry_to_state(params, momentum, key, fstate, ring, ebuf))
+        ckpt.save_run_state(checkpoint_dir, state0, round_idx=0,
+                            meta=checkpoint_meta())
+
+    seg_fns: dict = {}
+
+    def segment_fn(chunk):
+        if chunk not in seg_fns:
+            run_cfg = (cfg if cur_lr == cfg.lr
+                       else dataclasses.replace(cfg, lr=cur_lr))
+
+            def fn(params, momentum, key, fstate, ring, ebuf, t0, store):
+                return experiment_core(
+                    loss_fn, params, store, run_cfg, chunk, key, momentum,
+                    algo=algo, eval_fn=eval_fn, eval_every=eval_every,
+                    ring_size=ring_size, round_fn=round_fn, faults=faults,
+                    fault_state=fstate, t0=t0, total_rounds=rounds,
+                    ring=ring, ebuf=ebuf)
+
+            seg_fns[chunk] = jax.jit(
+                fn, donate_argnums=(0, 1, 2, 3, 4, 5) if donate else ())
+        return seg_fns[chunk]
+
+    retries, segments_done = 0, 0
+    while t < rounds:
+        chunk = min(checkpoint_every, rounds - t)
+        out = segment_fn(chunk)(params, momentum, key, fstate, ring, ebuf,
+                                jnp.int32(t), store)
+        # ONE host sync per segment: fetch the full carry, then everything
+        # below (divergence check + atomic save) is host-side numpy
+        state = jax.device_get(_carry_to_state(*out))
+        t_next = t + chunk
+        if not _finite_state(state, range(t, t_next), ring_alloc,
+                             eval_every, do_eval):
+            retries += 1
+            if retries > max_retries:
+                raise DivergenceError(t_next, max_retries, cur_lr)
+            cur_lr *= lr_backoff
+            events.append({"round": t_next, "event": "rollback",
+                           "from_round": t, "retry": retries, "lr": cur_lr})
+            seg_fns.clear()  # the backed-off lr is baked into the program
+            snap = ckpt.latest_run_state(checkpoint_dir)
+            good, _ = ckpt.restore_run_state(snap, state)
+            params, momentum, key, fstate, ring, ebuf = \
+                _state_to_carry(good, cfg)
+            continue
+        retries = 0
+        params, momentum, key, fstate, ring, ebuf = out
+        t = t_next
+        ckpt.save_run_state(checkpoint_dir, state, round_idx=t,
+                            meta=checkpoint_meta())
+        segments_done += 1
+        if segment_callback is not None:
+            segment_callback(t, rounds)
+        if max_segments is not None and segments_done >= max_segments:
+            break
+
+    eval_rounds = np.arange(0, t, eval_every) if do_eval else np.arange(0)
+    return ExperimentResult(params=params, momentum=momentum, key=key,
+                            metrics=ring, evals=ebuf, rounds=t,
+                            ring_size=ring_alloc, eval_rounds=eval_rounds,
+                            fault_state=fstate, events=list(events))
 
 
 def history(result: ExperimentResult, *, start_round: int = 0) -> list:
@@ -243,4 +505,10 @@ def history(result: ExperimentResult, *, start_round: int = 0) -> list:
         row.update({k: float(v[slot]) for k, v in mets.items()})
         row.update(ev_by_round.get(int(t), {}))
         out.append(row)
+    # structured host-side events (divergence rollbacks) interleave by
+    # round — a rollback at round t sorts before round t's successful retry
+    if result.events:
+        out.extend({**e, "round": start_round + int(e["round"])}
+                   for e in result.events)
+        out.sort(key=lambda r: (r["round"], "event" not in r))
     return out

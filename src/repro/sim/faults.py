@@ -1,0 +1,213 @@
+"""In-jit fault injection + graceful degradation (DESIGN.md §12).
+
+FedZO's convergence story (paper Sec. IV) covers partial participation and
+channel-induced client masking; real federations additionally lose clients
+to time-correlated outages, deadlines, and corrupted uploads. This module
+makes those processes first-class citizens of the compiled round:
+
+- **Time-correlated availability** — each of the N clients carries a
+  Gilbert–Elliott up/down Markov chain through the experiment carry
+  (up→down w.p. ``p_fail``, down→up w.p. ``p_recover`` per round); a
+  sampled client in the down state never uploads. Stationary up-fraction
+  is ``p_recover / (p_fail + p_recover)`` (pinned by a property test).
+- **Stragglers** — per-round exponential latency draws; a sampled client
+  whose latency exceeds ``deadline`` misses the aggregation window and is
+  masked out (``m_effective`` reports the surviving cohort).
+- **Corrupted uploads** — with probability ``p_corrupt`` a client's delta
+  arrives poisoned: all-NaN, all-Inf, or scaled garbage (``corrupt_mode``).
+- **Finite-guard** — the server-side defense: per-client deltas that are
+  non-finite (or norm-exploded beyond ``guard_norm``) are zeroed and masked
+  *before* aggregation, so one poisoned client cannot NaN the global model.
+  With the guard on, a poisoned client is bit-identical to the same client
+  channel-masked; with it off, the poison propagates (the failure mode the
+  guard exists for).
+
+All fault masks compose with channel-truncation scheduling and size
+weighting through the one shared ``aircomp.mask_stats`` convention, on
+every aggregation path (pytree / flat / wide / AirComp / sharded). An
+all-faulted round degenerates to a zero update exactly like an all-masked
+channel round (clamped divisor, zero Δ_max → zero noise).
+
+The per-round key for the fault processes is the 6th stream of the round
+key chain (``sim.engine.round_keys``); a fault-free run keeps the original
+5-way split, so existing trajectories (and the golden fixtures) are
+untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DivergenceError(RuntimeError):
+    """A run diverged (non-finite params or metrics) and stayed divergent
+    through the bounded lr-backoff retries. Carries the structured context
+    a driver needs to report or escalate."""
+
+    def __init__(self, round_idx: int, retries: int, lr: float,
+                 detail: str = ""):
+        self.round = int(round_idx)
+        self.retries = int(retries)
+        self.lr = float(lr)
+        msg = (f"experiment diverged at round {round_idx} and stayed "
+               f"divergent after {retries} lr-backoff retries "
+               f"(last lr={lr:g})")
+        if detail:
+            msg += f": {detail}"
+        super().__init__(msg)
+
+
+def _row_sq_norms_tree(deltas):
+    """‖Δ_i‖² over stacked pytree deltas (leading M axis) -> [M] f32."""
+    leaves = jax.tree.leaves(deltas)
+    return sum(jnp.sum(jnp.square(l.astype(jnp.float32)),
+                       axis=tuple(range(1, l.ndim))) for l in leaves)
+
+
+def _bcast(mask, leaf):
+    """Reshape an [M] mask to broadcast over a leading-M leaf."""
+    return mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+
+@dataclass(frozen=True)
+class FaultModel:
+    """Static fault-process configuration (hashable — safe to close over in
+    jitted programs). All processes default OFF; the finite-guard defaults
+    ON because injection without the guard exists only to demonstrate the
+    failure mode."""
+    # Gilbert–Elliott availability chain (per client, per round)
+    p_fail: float = 0.0        # up → down transition probability
+    p_recover: float = 1.0     # down → up transition probability
+    # straggler process: latency ~ Exponential(mean=straggler_mean); a
+    # sampled client with latency > deadline misses the round. 0 disables.
+    deadline: float = 0.0
+    straggler_mean: float = 1.0
+    # corrupted uploads
+    p_corrupt: float = 0.0
+    corrupt_mode: str = "nan"  # nan | inf | scale
+    corrupt_scale: float = 1e8
+    # server-side finite-guard: zero+mask non-finite (and, with
+    # guard_norm > 0, norm-exploded) client deltas before aggregation
+    guard: bool = True
+    guard_norm: float = 0.0    # >0: additionally mask rows with ‖Δ‖ > this
+
+    def __post_init__(self):
+        if self.corrupt_mode not in ("nan", "inf", "scale"):
+            raise ValueError(f"corrupt_mode must be nan|inf|scale, got "
+                             f"{self.corrupt_mode!r}")
+        for name in ("p_fail", "p_recover", "p_corrupt"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name}={v} is not a probability")
+
+    @property
+    def stationary_up(self) -> float:
+        """Stationary availability of the Gilbert–Elliott chain."""
+        denom = self.p_fail + self.p_recover
+        return 1.0 if denom == 0 else self.p_recover / denom
+
+    # -- carry state ---------------------------------------------------------
+    def init_state(self, n_clients: int):
+        """Round-0 availability state: every client up. [N] bool, lives in
+        the experiment carry (and in durable checkpoints)."""
+        return jnp.ones((n_clients,), jnp.bool_)
+
+    def step(self, key, state, idx) -> tuple:
+        """Advance the chain one round and realize this round's faults for
+        the sampled cohort ``idx`` ([M] client ids).
+
+        Returns ``(new_state [N] bool, RoundFaults)``. Fully traceable; the
+        same derivation runs in the scan engine and the host loop, so the
+        two stay bitwise-identical under faults.
+        """
+        k_avail, k_lat, k_corr = jax.random.split(key, 3)
+        n = state.shape[0]
+        u = jax.random.uniform(k_avail, (n,))
+        up = jnp.where(state, u >= self.p_fail, u < self.p_recover)
+        m = idx.shape[0]
+        mask = up[idx]
+        if self.deadline > 0:
+            lat = jax.random.exponential(k_lat, (m,)) * self.straggler_mean
+            mask = mask & (lat <= self.deadline)
+        if self.p_corrupt > 0:
+            corrupt = jax.random.uniform(k_corr, (m,)) < self.p_corrupt
+        else:
+            corrupt = jnp.zeros((m,), jnp.bool_)
+        return up, RoundFaults(model=self, mask=mask, corrupt=corrupt)
+
+    # -- delta scrubbing (shared by every aggregation path) ------------------
+    def _poisoned(self, leaf):
+        if self.corrupt_mode == "scale":
+            return leaf * jnp.asarray(self.corrupt_scale, leaf.dtype)
+        fill = jnp.nan if self.corrupt_mode == "nan" else jnp.inf
+        return jnp.full_like(leaf, fill)
+
+    def scrub(self, deltas, mask, corrupt):
+        """Corrupt-then-guard a flat [m, n] delta matrix.
+
+        Applies the in-flight corruption to the flagged rows, then (guard
+        on) zeroes and masks rows that arrive non-finite or norm-exploded.
+        Returns ``(clean_deltas, ok [m] bool)`` where ``ok`` is the
+        surviving-row mask (availability ∧ deadline ∧ guard) and every
+        non-surviving row is exactly zero — so masked aggregation over the
+        survivors is bit-identical to the same round with those clients
+        channel-masked. Row-local (no cross-row reductions), so the sharded
+        round can run it per device shard.
+        """
+        if self.p_corrupt > 0:
+            deltas = jnp.where(corrupt[:, None], self._poisoned(deltas),
+                               deltas)
+        ok = mask
+        if self.guard:
+            sq = jnp.sum(jnp.square(deltas.astype(jnp.float32)), axis=1)
+            good = jnp.isfinite(sq)
+            if self.guard_norm > 0:
+                good = good & (sq <= jnp.float32(self.guard_norm) ** 2)
+            ok = ok & good
+        deltas = jnp.where(ok[:, None], deltas, jnp.zeros_like(deltas))
+        return deltas, ok
+
+    def scrub_tree(self, deltas, mask, corrupt):
+        """``scrub`` for stacked pytree deltas (leading [M] axes)."""
+        if self.p_corrupt > 0:
+            deltas = jax.tree.map(
+                lambda l: jnp.where(_bcast(corrupt, l), self._poisoned(l),
+                                    l), deltas)
+        ok = mask
+        if self.guard:
+            sq = _row_sq_norms_tree(deltas)
+            good = jnp.isfinite(sq)
+            if self.guard_norm > 0:
+                good = good & (sq <= jnp.float32(self.guard_norm) ** 2)
+            ok = ok & good
+        deltas = jax.tree.map(
+            lambda l: jnp.where(_bcast(ok, l), l, jnp.zeros_like(l)), deltas)
+        return deltas, ok
+
+    def replace(self, **kw) -> "FaultModel":
+        return dataclasses.replace(self, **kw)
+
+
+class RoundFaults(NamedTuple):
+    """One round's realized faults for the M sampled clients, handed to the
+    round functions by ``sim.engine.make_round_step``. ``model`` carries the
+    static scrub parameters; ``mask``/``corrupt`` are traced [M] arrays."""
+    model: FaultModel
+    mask: jnp.ndarray      # [M] bool — client reachable (up ∧ met deadline)
+    corrupt: jnp.ndarray   # [M] bool — upload poisoned in flight
+
+    def apply_flat(self, deltas):
+        """Scrub a flat [M, n_pad] delta matrix -> (deltas, ok [M])."""
+        return self.model.scrub(deltas, self.mask, self.corrupt)
+
+    def apply_tree(self, deltas):
+        """Scrub stacked pytree deltas -> (deltas, ok [M])."""
+        return self.model.scrub_tree(deltas, self.mask, self.corrupt)
+
+    @property
+    def n_corrupt(self):
+        return jnp.sum(self.corrupt.astype(jnp.float32))

@@ -44,7 +44,8 @@ def make_sharded_round(loss_fn, cfg: FedZOConfig, mesh: Mesh, *,
     n_dev = mesh.shape[axis]
 
     def round_fn(loss_fn_, server_params, client_batches, client_rngs, cfg_,
-                 *, channel_rng=None, momentum=None, weights=None):
+                 *, channel_rng=None, momentum=None, weights=None,
+                 faults=None):
         if loss_fn_ is not loss_fn or cfg_ is not cfg:
             # the mesh deployment (phase choice, geometry, device split) is
             # bound at construction — a per-call substitution would silently
@@ -72,7 +73,7 @@ def make_sharded_round(loss_fn, cfg: FedZOConfig, mesh: Mesh, *,
         use_rowcoef = mask is not None or weights is not None
         maskf, m_div, m_sched = mask_stats(mask, M, weights)
 
-        def shard_body(b0, params, batches_l, rngs_l, maskf_l):
+        def local_deltas(b0, params, batches_l, rngs_l):
             keys = jax.vmap(lambda r: jax.random.split(
                 r, cfg.local_iters))(rngs_l)
 
@@ -88,7 +89,10 @@ def make_sharded_round(loss_fn, cfg: FedZOConfig, mesh: Mesh, *,
                                                     ks, batches, cfg)
                     return buf - b0, base
 
-            deltas_l, losses_l = jax.vmap(one_client)(batches_l, keys)
+            return jax.vmap(one_client)(batches_l, keys)
+
+        def shard_body(b0, params, batches_l, rngs_l, maskf_l):
+            deltas_l, losses_l = local_deltas(b0, params, batches_l, rngs_l)
 
             if use_air:
                 part, sq_l = kops.aircomp_reduce(deltas_l, maskf_l / m_div,
@@ -104,12 +108,51 @@ def make_sharded_round(loss_fn, cfg: FedZOConfig, mesh: Mesh, *,
                 sq_l = jnp.zeros((deltas_l.shape[0],), jnp.float32)
             return mean, sq_l, losses_l
 
-        agg_flat, sq, losses = shard_map(
-            shard_body, mesh=mesh,
-            in_specs=(P(), P(), P(axis), P(axis), P(axis)),
-            out_specs=(P(), P(axis), P(axis)),
-            check_rep=False)(buf0, server_params, client_batches,
-                             client_rngs, maskf)
+        def shard_body_faults(b0, params, batches_l, rngs_l, chan_l, w_l,
+                              fmask_l, corrupt_l):
+            """Fault variant: the guard verdict (and with it the surviving
+            cohort and the mean divisor) is only known per-shard, so the
+            scrub runs on each device's rows and the divisor is a psum of
+            per-shard coefficient sums — mirroring ``mask_stats`` on the
+            combined channel ∧ fault mask bit-for-bit on one device."""
+            deltas_l, losses_l = local_deltas(b0, params, batches_l, rngs_l)
+            deltas_l, ok_l = faults.model.scrub(deltas_l, fmask_l, corrupt_l)
+            combined_l = (chan_l & ok_l).astype(jnp.float32)
+            n_sched = jax.lax.psum(jnp.sum(combined_l), axis)
+            coef_l = combined_l * w_l
+            if weights is None:
+                div = jnp.maximum(n_sched, 1.0)
+            else:
+                div = jnp.maximum(jax.lax.psum(jnp.sum(coef_l), axis), 1e-8)
+            if use_air:
+                part, sq_l = kops.aircomp_reduce(deltas_l, coef_l / div,
+                                                 spec.d, block_rows=br)
+                mean = jax.lax.psum(part, axis)
+            else:
+                part = jnp.einsum("mn,m->n", deltas_l, coef_l)
+                mean = jax.lax.psum(part, axis) / div
+                sq_l = jnp.zeros((deltas_l.shape[0],), jnp.float32)
+            return mean, sq_l, losses_l, coef_l, div, n_sched
+
+        if faults is not None:
+            chan = (jnp.ones((M,), jnp.bool_) if mask is None else mask)
+            w = (jnp.ones((M,), jnp.float32) if weights is None
+                 else weights.astype(jnp.float32))
+            agg_flat, sq, losses, maskf, m_div, m_sched = shard_map(
+                shard_body_faults, mesh=mesh,
+                in_specs=(P(), P(), P(axis), P(axis), P(axis), P(axis),
+                          P(axis), P(axis)),
+                out_specs=(P(), P(axis), P(axis), P(axis), P(), P()),
+                check_rep=False)(buf0, server_params, client_batches,
+                                 client_rngs, chan, w, faults.mask,
+                                 faults.corrupt)
+        else:
+            agg_flat, sq, losses = shard_map(
+                shard_body, mesh=mesh,
+                in_specs=(P(), P(), P(axis), P(axis), P(axis)),
+                out_specs=(P(), P(axis), P(axis)),
+                check_rep=False)(buf0, server_params, client_batches,
+                                 client_rngs, maskf)
 
         if use_air:
             # Δ_max / Eq.-17 noise on the replicated mean: literally the
@@ -125,8 +168,10 @@ def make_sharded_round(loss_fn, cfg: FedZOConfig, mesh: Mesh, *,
                                     kind="normal", block_rows=br)
             air_stats = {"aircomp_noise_std": noise_std,
                          "delta_max": delta_max, "m_effective": m_sched}
-        elif mask is not None:
+        elif mask is not None or faults is not None:
             air_stats = {"m_effective": m_sched}
+        if faults is not None:
+            air_stats["m_corrupt"] = faults.n_corrupt
 
         agg = unflatten(agg_flat, spec)
         if momentum is not None and cfg.server_momentum > 0:

@@ -85,7 +85,7 @@ def run_sweep(loss_fn, params, store: ClientStore, base_cfg: FedZOConfig,
                 loss_fn, params, store, c, rounds, key, None, algo=algo,
                 eval_fn=eval_fn, eval_every=eval_every, ring_size=ring_size)
 
-        _, _, _, ring, ebuf = jax.jit(jax.vmap(one))(dyn_stack, seeds)
+        _, _, _, _, ring, ebuf = jax.jit(jax.vmap(one))(dyn_stack, seeds)
         ring = jax.device_get(ring)
         ebuf = jax.device_get(ebuf)
         eval_rounds = (np.arange(0, rounds, eval_every)

@@ -1,0 +1,321 @@
+"""Durable engine checkpoints + resumable runs (DESIGN.md §12).
+
+Pins the durability contracts:
+
+- the chunked segment runner (``checkpoint_every=k``) is BITWISE identical
+  to the single-shot scan, faults included;
+- a run killed between segments resumes from the latest atomic snapshot
+  and finishes bit-identical to the committed golden fixtures (pytree AND
+  flat/AirComp paths — the ISSUE acceptance matrix);
+- snapshots are atomic: tmp-dir staging, ``LATEST`` pointer swap, stale
+  tmp debris ignored and swept, bounded retention;
+- ``checkpoint.restore`` fails loudly: missing keys / shape mismatches
+  name the exact pytree leaf, and sidecars carry jax version + config
+  hash (version / config drift warns on restore).
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sim
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import FedZOConfig
+from repro.data.synthetic import make_classification, noniid_shards
+from repro.models.simple import softmax_init, softmax_loss
+
+BR = 4
+
+
+def _setup(n=640, n_clients=8, seed=0):
+    x, y = make_classification(n, 24, 4, seed=seed)
+    return sim.build_store(noniid_shards(x, y, n_clients))
+
+
+def _cfg(**kw):
+    base = dict(n_devices=8, n_participating=4, local_iters=2, lr=1e-2,
+                mu=1e-3, b1=8, b2=4, seed=3)
+    base.update(kw)
+    return FedZOConfig(**base)
+
+
+def _assert_trees_bitequal(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def _assert_results_bitequal(a, b):
+    _assert_trees_bitequal(a.params, b.params)
+    np.testing.assert_array_equal(jax.random.key_data(a.key),
+                                  jax.random.key_data(b.key))
+    assert sorted(a.metrics) == sorted(b.metrics)
+    for k in a.metrics:
+        np.testing.assert_array_equal(np.asarray(a.metrics[k]),
+                                      np.asarray(b.metrics[k]), err_msg=k)
+    for k in a.evals:
+        np.testing.assert_array_equal(np.asarray(a.evals[k]),
+                                      np.asarray(b.evals[k]), err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# restore error quality + sidecar provenance (satellites 1 & 2)
+
+
+def test_restore_shape_mismatch_names_leaf(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, {"w": jnp.zeros((3, 2)), "b": jnp.zeros((3,))})
+    bad_like = {"w": jnp.zeros((5, 2)), "b": jnp.zeros((3,))}
+    with pytest.raises(ValueError, match=r"\['w'\].*\(3, 2\).*\(5, 2\)"):
+        ckpt.restore(d, bad_like)
+
+
+def test_restore_missing_key_names_leaf(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, {"w": jnp.zeros((3, 2))})
+    with pytest.raises(ValueError, match=r"no entry.*\['extra'\]"):
+        ckpt.restore(d, {"w": jnp.zeros((3, 2)), "extra": jnp.zeros((2,))})
+
+
+def test_sidecar_provenance_fields(tmp_path):
+    d = str(tmp_path / "ck")
+    cfg = _cfg()
+    ckpt.save(d, {"w": jnp.ones((2,))}, step=7, meta=cfg)
+    with open(os.path.join(d, "meta.json")) as f:
+        md = json.load(f)
+    assert md["jax_version"] == jax.__version__
+    assert md["step"] == 7
+    assert md["config_hash"] == ckpt.config_hash(cfg)
+    assert "created_at" in md
+    params, step = ckpt.restore(d, {"w": jnp.zeros((2,))})
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(params["w"]), np.ones(2))
+
+
+def test_jax_version_mismatch_warns(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, {"w": jnp.ones((2,))})
+    mp = os.path.join(d, "meta.json")
+    with open(mp) as f:
+        md = json.load(f)
+    md["jax_version"] = "0.0.1"
+    with open(mp, "w") as f:
+        json.dump(md, f)
+    with pytest.warns(UserWarning, match="jax 0.0.1"):
+        ckpt.restore(d, {"w": jnp.zeros((2,))})
+
+
+# ---------------------------------------------------------------------------
+# atomic run-state snapshots
+
+
+def _tiny_state(v=0.0):
+    return {"params": {"w": np.full((2,), v, np.float32)},
+            "ring": {"loss": np.zeros((4,), np.float32)}}
+
+
+def test_save_run_state_pointer_and_retention(tmp_path):
+    d = str(tmp_path / "ck")
+    for t in (0, 2, 4, 6):
+        ckpt.save_run_state(d, _tiny_state(float(t)), round_idx=t,
+                            meta={"lr": 0.1}, keep=3)
+    assert ckpt.latest_run_state(d) == os.path.join(d, "round_00000006")
+    # retention: only the newest `keep` snapshots survive the sweep
+    kept = sorted(e for e in os.listdir(d) if e.startswith("round_"))
+    assert kept == ["round_00000002", "round_00000004", "round_00000006"]
+    state, meta = ckpt.restore_run_state(ckpt.latest_run_state(d),
+                                         _tiny_state())
+    assert meta["round"] == 6 and meta["lr"] == 0.1
+    np.testing.assert_array_equal(state["params"]["w"], np.full(2, 6.0))
+
+
+def test_stale_tmp_debris_is_ignored_and_swept(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save_run_state(d, _tiny_state(1.0), round_idx=1)
+    # a writer SIGKILLed mid-stage leaves a tmp dir behind
+    stale = os.path.join(d, "round_00000099.tmp.12345")
+    os.makedirs(stale)
+    with open(os.path.join(stale, "meta.json"), "w") as f:
+        f.write("{}")
+    assert ckpt.latest_run_state(d) == os.path.join(d, "round_00000001")
+    ckpt.save_run_state(d, _tiny_state(2.0), round_idx=2)
+    assert not os.path.exists(stale)
+
+
+def test_latest_pointer_fallback_to_highest_snapshot(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save_run_state(d, _tiny_state(1.0), round_idx=1)
+    ckpt.save_run_state(d, _tiny_state(3.0), round_idx=3)
+    os.remove(os.path.join(d, "LATEST"))
+    assert ckpt.latest_run_state(d) == os.path.join(d, "round_00000003")
+
+
+def test_latest_run_state_empty_dir_is_none(tmp_path):
+    assert ckpt.latest_run_state(str(tmp_path / "nothing")) is None
+
+
+# ---------------------------------------------------------------------------
+# chunked segment runner ≡ single-shot scan (bitwise)
+
+
+ENGINE_CASES = [
+    ("pytree", {}, None),
+    ("flat_aircomp", {"flat_params": True, "flat_block_rows": BR,
+                      "aircomp": True, "snr_db": 10.0,
+                      "channel_schedule": True}, None),
+    ("pytree_faults", {}, sim.FaultModel(p_fail=0.3, p_recover=0.5,
+                                         deadline=1.5, p_corrupt=0.3)),
+]
+
+
+@pytest.mark.parametrize("name,kw,faults", ENGINE_CASES)
+def test_chunked_matches_single_shot(name, kw, faults, tmp_path):
+    store = _setup()
+    cfg = _cfg(**kw)
+    p0 = softmax_init(None, 24, 4)
+    single = sim.run_experiment(softmax_loss, p0, store, cfg, 6,
+                                faults=faults, donate=False)
+    chunked = sim.run_experiment(
+        softmax_loss, p0, store, cfg, 6, faults=faults, donate=False,
+        checkpoint_every=4, checkpoint_dir=str(tmp_path / name))
+    assert chunked.rounds == 6
+    _assert_results_bitequal(single, chunked)
+    if faults is not None:
+        np.testing.assert_array_equal(np.asarray(single.fault_state),
+                                      np.asarray(chunked.fault_state))
+
+
+@pytest.mark.parametrize("name,kw,faults", ENGINE_CASES)
+def test_kill_between_segments_then_resume_is_bitexact(name, kw, faults,
+                                                       tmp_path):
+    """The preemption drill at the engine level: stop after ONE segment
+    (the carry survives only on disk), then a FRESH call with resume=True
+    finishes the run bit-identical to the uninterrupted one."""
+    store = _setup()
+    cfg = _cfg(**kw)
+    p0 = softmax_init(None, 24, 4)
+    d = str(tmp_path / name)
+    single = sim.run_experiment(softmax_loss, p0, store, cfg, 6,
+                                faults=faults, donate=False)
+    part = sim.run_experiment(softmax_loss, p0, store, cfg, 6, faults=faults,
+                              donate=False, checkpoint_every=2,
+                              checkpoint_dir=d, max_segments=1)
+    assert part.rounds == 2
+    resumed = sim.run_experiment(softmax_loss, p0, store, cfg, 6,
+                                 faults=faults, donate=False,
+                                 checkpoint_every=2, checkpoint_dir=d,
+                                 resume=True)
+    assert resumed.rounds == 6
+    _assert_results_bitequal(single, resumed)
+
+
+def test_resume_on_fresh_dir_is_a_fresh_start(tmp_path):
+    store = _setup()
+    cfg = _cfg()
+    p0 = softmax_init(None, 24, 4)
+    plain = sim.run_experiment(softmax_loss, p0, store, cfg, 4, donate=False,
+                               checkpoint_every=2,
+                               checkpoint_dir=str(tmp_path / "a"))
+    fresh = sim.run_experiment(softmax_loss, p0, store, cfg, 4, donate=False,
+                               checkpoint_every=2,
+                               checkpoint_dir=str(tmp_path / "b"),
+                               resume=True)
+    _assert_results_bitequal(plain, fresh)
+
+
+def test_resume_already_complete_is_a_noop(tmp_path):
+    store = _setup()
+    cfg = _cfg()
+    p0 = softmax_init(None, 24, 4)
+    d = str(tmp_path / "ck")
+    done = sim.run_experiment(softmax_loss, p0, store, cfg, 4, donate=False,
+                              checkpoint_every=2, checkpoint_dir=d)
+    again = sim.run_experiment(softmax_loss, p0, store, cfg, 4, donate=False,
+                               checkpoint_every=2, checkpoint_dir=d,
+                               resume=True)
+    _assert_results_bitequal(done, again)
+
+
+def test_resume_under_different_config_warns(tmp_path):
+    store = _setup()
+    p0 = softmax_init(None, 24, 4)
+    d = str(tmp_path / "ck")
+    sim.run_experiment(softmax_loss, p0, store, _cfg(), 4, donate=False,
+                       checkpoint_every=2, checkpoint_dir=d, max_segments=1)
+    with pytest.warns(UserWarning, match="DIFFERENT config"):
+        sim.run_experiment(softmax_loss, p0, store, _cfg(lr=5e-3), 4,
+                           donate=False, checkpoint_every=2,
+                           checkpoint_dir=d, resume=True)
+
+
+def test_run_state_meta_records_run_context(tmp_path):
+    store = _setup()
+    cfg = _cfg()
+    d = str(tmp_path / "ck")
+    sim.run_experiment(softmax_loss, softmax_init(None, 24, 4), store, cfg,
+                       4, donate=False, checkpoint_every=2,
+                       checkpoint_dir=d)
+    with open(os.path.join(ckpt.latest_run_state(d), "meta.json")) as f:
+        md = json.load(f)
+    assert md["meta"]["round"] == 4
+    assert md["meta"]["rounds_total"] == 4
+    assert md["meta"]["config_hash"] == ckpt.config_hash(cfg)
+    assert md["meta"]["lr"] == cfg.lr
+    assert md["jax_version"] == jax.__version__
+
+
+def test_checkpoint_every_requires_dir():
+    store = _setup()
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        sim.run_experiment(softmax_loss, softmax_init(None, 24, 4), store,
+                           _cfg(), 2, checkpoint_every=1)
+
+
+# ---------------------------------------------------------------------------
+# kill-and-resume vs the committed golden fixtures (ISSUE acceptance)
+
+
+@pytest.mark.parametrize("name", ["softmax_counter", "softmax_aircomp"])
+def test_kill_and_resume_matches_golden_fixture(name, tmp_path):
+    """A run preempted mid-experiment and resumed from disk must land on
+    the EXACT committed golden trajectory — pytree reference and
+    flat/AirComp kernel paths."""
+    import importlib.util
+
+    regen_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                              "golden", "regen.py")
+    spec = importlib.util.spec_from_file_location("golden_regen_ckpt",
+                                                  regen_path)
+    regen = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(regen)
+
+    from repro.workloads import neural
+
+    gspec = regen.GOLDEN[name]
+    with open(regen.fixture_path(name)) as f:
+        want = json.load(f)
+    task_kw = dict(gspec["task"])
+    task = neural.make_task(task_kw.pop("name"), **task_kw)
+    cfg = neural.default_config(task, **gspec["cfg"])
+    d = str(tmp_path / name)
+    part = neural.run(task, cfg, gspec["rounds"], eval_every=2,
+                      eval_rows=gspec["task"]["n_test"], donate=False,
+                      checkpoint_every=3, checkpoint_dir=d, max_segments=1)
+    assert part.rounds == 3  # "killed" with the run mid-flight
+    res = neural.run(task, cfg, gspec["rounds"], eval_every=2,
+                     eval_rows=gspec["task"]["n_test"], donate=False,
+                     checkpoint_every=3, checkpoint_dir=d, resume=True)
+    assert res.rounds == gspec["rounds"]
+    buf = np.concatenate([np.asarray(l, np.float32).ravel()
+                          for l in jax.tree.leaves(res.params)])
+    assert buf.tobytes().hex() == want["final_params_hex"], (
+        f"{name}: resumed run drifted from the golden trajectory")
+    mets = jax.device_get(res.metrics)
+    evals = jax.device_get(res.evals)
+    for group, got in (("metrics", mets), ("evals", evals)):
+        for k, hexes in want[group].items():
+            got_hex = [np.float32(v).tobytes().hex()
+                       for v in np.asarray(got[k]).ravel()]
+            assert got_hex == hexes, f"{name}: {group}[{k}] drifted"

@@ -1,0 +1,382 @@
+"""Fault injection + graceful degradation (DESIGN.md §12).
+
+Pins the fault layer's contracts:
+- host loop ≡ engine stays BITWISE under faults on every aggregation path
+  (the fault draws hang off the shared carried key chain);
+- the Gilbert–Elliott availability chain hits its stationary distribution
+  (hypothesis property test);
+- one all-NaN client leaves the aggregate finite and bit-equal to the same
+  round with that client channel-masked (the finite-guard regression);
+- an all-faulted round degenerates to a zero update with m_effective == 0;
+- guard OFF propagates the poison (the failure mode the guard exists for);
+- divergence rollback: FedServer and the checkpointed engine roll a
+  non-finite round back with lr backoff, emit structured rollback rows,
+  and raise ``DivergenceError`` when retries are exhausted.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import hypothesis, st
+from repro import sim
+from repro.configs.base import FedZOConfig
+from repro.core import fedzo
+from repro.data.synthetic import make_classification, noniid_shards
+from repro.fed.server import FedServer
+from repro.models.simple import softmax_init, softmax_loss
+from repro.sim.faults import DivergenceError, FaultModel, RoundFaults
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=10,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("ci")
+
+BR = 4  # small kernel blocks for CPU interpret mode
+
+FAULTS = FaultModel(p_fail=0.3, p_recover=0.5, deadline=1.5,
+                    straggler_mean=1.0, p_corrupt=0.3, corrupt_mode="nan")
+
+
+def _setup(n=640, n_clients=8, n_features=24, n_classes=4, seed=0):
+    x, y = make_classification(n, n_features, n_classes, seed=seed)
+    clients = noniid_shards(x, y, n_clients)
+    return clients, sim.build_store(clients)
+
+
+def _cfg(**kw):
+    base = dict(n_devices=8, n_participating=4, local_iters=2, lr=1e-2,
+                mu=1e-3, b1=8, b2=4, seed=3)
+    base.update(kw)
+    return FedZOConfig(**base)
+
+
+def _assert_trees_bitequal(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# host ≡ engine bitwise, under faults, on every aggregation path
+
+
+@pytest.mark.parametrize("name,kw,algo", [
+    ("plain", {}, "fedzo"),
+    ("momentum", {"server_momentum": 0.9}, "fedzo"),
+    ("aircomp_sched", {"aircomp": True, "snr_db": 10.0,
+                       "channel_schedule": True}, "fedzo"),
+    ("flat", {"flat_params": True, "flat_block_rows": BR}, "fedzo"),
+    ("wide_weighted", {"batch_directions": True, "direction_conv": "block",
+                       "prng_impl": "unsafe_rbg",
+                       "weight_by_size": True}, "fedzo"),
+    ("fedavg_sched", {"channel_schedule": True}, "fedavg"),
+])
+def test_engine_bitmatches_host_rounds_with_faults(name, kw, algo):
+    """The ISSUE acceptance matrix: with dropout + stragglers + corrupted
+    uploads enabled, R scanned rounds == R host-driven rounds bit for bit,
+    every aggregation path stays finite, and m_effective reports the
+    surviving cohort."""
+    clients, store = _setup()
+    cfg = _cfg(**kw)
+    p0 = softmax_init(None, 24, 4)
+    host = FedServer(softmax_loss, p0, clients, cfg, algo=algo, store=store,
+                     faults=FAULTS)
+    for t in range(3):
+        host.run_round(t)
+    scanned = FedServer(softmax_loss, p0, clients, cfg, algo=algo,
+                        store=store, faults=FAULTS)
+    scanned.run(3)
+    _assert_trees_bitequal(host.params, scanned.params)
+    for leaf in jax.tree.leaves(host.params):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+    for hm, sm in zip(host.history, scanned.history):
+        assert hm["mean_local_loss"] == sm["mean_local_loss"], (hm, sm)
+        if algo == "fedzo":
+            assert 0.0 <= hm["m_effective"] <= cfg.n_participating
+            assert hm["m_corrupt"] == sm["m_corrupt"]
+
+
+def test_faultfree_model_matches_huge_deadline():
+    """The straggler deadline only changes the trajectory through the mask:
+    an unreachable deadline is bit-identical to no straggler process (the
+    latency draws ride a dead-end key split)."""
+    _, store = _setup()
+    cfg = _cfg()
+    p0 = softmax_init(None, 24, 4)
+    off = sim.run_experiment(softmax_loss, p0, store, cfg, 3,
+                             faults=FaultModel(), donate=False)
+    huge = sim.run_experiment(
+        softmax_loss, p0, store, cfg, 3, donate=False,
+        faults=FaultModel(deadline=1e9, straggler_mean=1.0))
+    _assert_trees_bitequal(off.params, huge.params)
+
+
+def test_tight_deadline_freezes_model():
+    """deadline → 0 masks every sampled client: each round degenerates to
+    the zero update and m_effective == 0 throughout."""
+    _, store = _setup()
+    cfg = _cfg()
+    p0 = softmax_init(None, 24, 4)
+    res = sim.run_experiment(
+        softmax_loss, p0, store, cfg, 3, donate=False,
+        faults=FaultModel(deadline=1e-12, straggler_mean=1.0))
+    _assert_trees_bitequal(res.params, p0)
+    np.testing.assert_array_equal(np.asarray(res.metrics["m_effective"]),
+                                  np.zeros(3, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Gilbert–Elliott availability chain
+
+
+@hypothesis.given(st.floats(0.05, 0.95), st.floats(0.05, 0.95))
+def test_gilbert_elliott_hits_stationary_distribution(p_fail, p_recover):
+    """Long-run availability of the up/down chain converges to
+    π_up = p_recover / (p_fail + p_recover)."""
+    model = FaultModel(p_fail=p_fail, p_recover=p_recover)
+    n, t = 1000, 200
+
+    @jax.jit
+    def up_fracs():
+        idx = jnp.arange(1)
+
+        def body(state, k):
+            state, _ = model.step(k, state, idx)
+            return state, jnp.mean(state.astype(jnp.float32))
+
+        keys = jax.random.split(jax.random.key(7), t)
+        _, fracs = jax.lax.scan(body, model.init_state(n), keys)
+        return fracs
+
+    tail = np.asarray(up_fracs())[t // 2:]
+    assert abs(float(tail.mean()) - model.stationary_up) < 0.05
+
+
+def test_fault_state_lives_in_the_carry():
+    """Availability is TIME-CORRELATED: the [N] chain state threads through
+    the experiment carry and comes back evolved (not reset per round)."""
+    _, store = _setup()
+    res = sim.run_experiment(
+        softmax_loss, softmax_init(None, 24, 4), store, _cfg(), 20,
+        donate=False, faults=FaultModel(p_fail=0.9, p_recover=0.05))
+    fstate = np.asarray(res.fault_state)
+    assert fstate.shape == (8,) and fstate.dtype == bool
+    assert not fstate.all()  # p_fail≫p_recover: some clients are down
+
+
+# ---------------------------------------------------------------------------
+# finite-guard: one poisoned client ≡ that client channel-masked
+
+
+def _one_round_inputs(cfg, seed=5):
+    """Deterministic (params, batches, rngs) for direct round calls."""
+    clients, store = _setup()
+    key = jax.random.key(seed, impl=cfg.prng_impl)
+    k_part, k_batch, k_zo = jax.random.split(key, 3)
+    idx = sim.sample_participants(k_part, store.n_clients,
+                                  cfg.n_participating)
+    batches = sim.sample_batches(store, idx, k_batch, cfg.local_iters,
+                                 cfg.b1)
+    rngs = jax.random.split(k_zo, cfg.n_participating)
+    return softmax_init(None, 24, 4), batches, rngs
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("pytree", {}),
+    ("flat", {"flat_params": True, "flat_block_rows": BR}),
+    ("aircomp", {"flat_params": True, "flat_block_rows": BR,
+                 "aircomp": True, "snr_db": 10.0}),
+])
+def test_nan_client_bitequal_to_masked_client(name, kw):
+    """One all-NaN upload, guard ON: the aggregate is finite and BIT-EQUAL
+    to the same round with that client channel-masked — the scrub zeroes
+    the poisoned row before it can touch the masked mean / Δ_max."""
+    cfg = _cfg(**kw)
+    params, batches, rngs = _one_round_inputs(cfg)
+    M = cfg.n_participating
+    poisoned = jnp.zeros((M,), bool).at[1].set(True)
+    chan = jax.random.key(9, impl=cfg.prng_impl) if cfg.aircomp else None
+
+    model = FaultModel(p_corrupt=0.5, corrupt_mode="nan")  # guard ON
+    inj_nan = RoundFaults(model=model, mask=jnp.ones((M,), bool),
+                          corrupt=poisoned)
+    p_nan, m_nan = fedzo.round_simulated(softmax_loss, params, batches, rngs,
+                                         cfg, channel_rng=chan,
+                                         faults=inj_nan)
+    inj_masked = RoundFaults(model=FaultModel(), mask=~poisoned,
+                             corrupt=jnp.zeros((M,), bool))
+    p_masked, m_masked = fedzo.round_simulated(softmax_loss, params, batches,
+                                               rngs, cfg, channel_rng=chan,
+                                               faults=inj_masked)
+    for leaf in jax.tree.leaves(p_nan):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+    _assert_trees_bitequal(p_nan, p_masked)
+    assert float(m_nan["m_effective"]) == float(m_masked["m_effective"]) \
+        == M - 1
+    assert float(m_nan["m_corrupt"]) == 1.0
+
+
+def test_guard_off_propagates_poison():
+    """guard=False is the counterfactual: the same all-NaN upload NaNs the
+    global model — the failure mode the finite-guard exists to stop."""
+    cfg = _cfg()
+    params, batches, rngs = _one_round_inputs(cfg)
+    M = cfg.n_participating
+    model = FaultModel(p_corrupt=0.5, corrupt_mode="nan", guard=False)
+    inj = RoundFaults(model=model, mask=jnp.ones((M,), bool),
+                      corrupt=jnp.zeros((M,), bool).at[1].set(True))
+    p_bad, _ = fedzo.round_simulated(softmax_loss, params, batches, rngs,
+                                     cfg, faults=inj)
+    assert any(not np.all(np.isfinite(np.asarray(leaf)))
+               for leaf in jax.tree.leaves(p_bad))
+
+
+def test_guard_norm_masks_exploded_delta():
+    """guard_norm masks a finite-but-exploded upload (scale corruption)
+    exactly like a non-finite one."""
+    cfg = _cfg(flat_params=True, flat_block_rows=BR)
+    params, batches, rngs = _one_round_inputs(cfg)
+    M = cfg.n_participating
+    poisoned = jnp.zeros((M,), bool).at[2].set(True)
+    model = FaultModel(p_corrupt=0.5, corrupt_mode="scale",
+                       corrupt_scale=1e12, guard_norm=1e3)
+    inj = RoundFaults(model=model, mask=jnp.ones((M,), bool),
+                      corrupt=poisoned)
+    p_new, m = fedzo.round_simulated(softmax_loss, params, batches, rngs,
+                                     cfg, faults=inj)
+    inj_masked = RoundFaults(model=FaultModel(), mask=~poisoned,
+                             corrupt=jnp.zeros((M,), bool))
+    p_masked, _ = fedzo.round_simulated(softmax_loss, params, batches, rngs,
+                                        cfg, faults=inj_masked)
+    _assert_trees_bitequal(p_new, p_masked)
+    assert float(m["m_effective"]) == M - 1
+
+
+def test_all_faulted_round_is_zero_update():
+    """Every client down → the clamped divisor degenerates the round to a
+    zero update (params bit-unchanged), exactly like the all-masked channel
+    round; m_effective reports 0, not 1."""
+    for kw in ({}, {"flat_params": True, "flat_block_rows": BR}):
+        cfg = _cfg(**kw)
+        params, batches, rngs = _one_round_inputs(cfg)
+        M = cfg.n_participating
+        inj = RoundFaults(model=FaultModel(), mask=jnp.zeros((M,), bool),
+                          corrupt=jnp.zeros((M,), bool))
+        p_new, m = fedzo.round_simulated(softmax_loss, params, batches,
+                                         rngs, cfg, faults=inj)
+        _assert_trees_bitequal(p_new, params)
+        assert float(m["m_effective"]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# sharded round under faults
+
+
+def test_sharded_round_bitmatches_unsharded_under_faults():
+    """On a 1-device mesh the fault-aware shard_map body (scrub per shard,
+    psum'd divisor) must reproduce the unsharded fault round bit-for-bit."""
+    _, store = _setup()
+    cfg = sim.fast_sim_config(_cfg(weight_by_size=True))
+    p0 = softmax_init(None, 24, 4)
+    mesh = sim.make_clients_mesh()
+    rf = sim.make_sharded_round(softmax_loss, cfg, mesh)
+    res_s = sim.run_experiment(softmax_loss, p0, store, cfg, 3, round_fn=rf,
+                               faults=FAULTS, donate=False)
+    res_u = sim.run_experiment(softmax_loss, p0, store, cfg, 3,
+                               faults=FAULTS, donate=False)
+    _assert_trees_bitequal(res_s.params, res_u.params)
+    for k in res_u.metrics:
+        np.testing.assert_array_equal(np.asarray(res_s.metrics[k]),
+                                      np.asarray(res_u.metrics[k]), err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# divergence guard: rollback with lr backoff, then structured failure
+
+
+def _explosive_setup():
+    """A loss that overflows to inf within one local phase at large lr but
+    descends at small lr — the controlled divergence trigger."""
+    def loss(p, batch):
+        del batch
+        return jnp.exp(jnp.sum(jnp.square(p["x"] - 0.1)))
+
+    x, y = make_classification(320, 4, 2, seed=1)
+    clients = noniid_shards(x, y, 8)
+    store = sim.build_store(clients)
+    params = {"x": jnp.zeros((4,), jnp.float32)}
+    return loss, params, clients, store
+
+
+def test_fedserver_divergence_rollback_recovers():
+    loss, p0, clients, store = _explosive_setup()
+    cfg = _cfg(lr=1e6, local_iters=2)
+    srv = FedServer(loss, p0, clients, cfg, store=store,
+                    divergence_guard=True, max_retries=3, lr_backoff=1e-8)
+    srv.run(3, driver="host")
+    rollbacks = [h for h in srv.history if h.get("event") == "rollback"]
+    rounds = [h for h in srv.history if "event" not in h]
+    assert rollbacks, "the 1e6-lr first round must have diverged"
+    assert rollbacks[0]["round"] == 0 and rollbacks[0]["lr"] < 1.0
+    # satellite: rollback rows must NOT re-number the successful rounds
+    assert [h["round"] for h in rounds] == [0, 1, 2]
+    assert all(np.isfinite(h["mean_local_loss"]) for h in rounds)
+    for leaf in jax.tree.leaves(srv.params):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+
+
+def test_fedserver_divergence_exhaustion_raises():
+    loss, p0, clients, store = _explosive_setup()
+    cfg = _cfg(lr=1e6, local_iters=2)
+    srv = FedServer(loss, p0, clients, cfg, store=store,
+                    divergence_guard=True, max_retries=2, lr_backoff=1.0)
+    with pytest.raises(DivergenceError) as ei:
+        srv.run(3, driver="host")
+    assert ei.value.round == 0 and ei.value.retries == 2
+    assert sum(1 for h in srv.history
+               if h.get("event") == "rollback") == 2
+
+
+def test_engine_segment_divergence_rollback(tmp_path):
+    """The checkpointed engine loop: a diverging segment rolls back to the
+    round-0 snapshot with backed-off lr, records the structured event, and
+    completes finitely."""
+    loss, p0, _, store = _explosive_setup()
+    cfg = _cfg(lr=1e6, local_iters=2)
+    res = sim.run_experiment(
+        loss, p0, store, cfg, 4, checkpoint_every=2,
+        checkpoint_dir=str(tmp_path / "ck"), max_retries=3, lr_backoff=1e-8,
+        donate=False)
+    assert res.rounds == 4
+    assert [e["event"] for e in res.events] == ["rollback"]
+    assert res.events[0]["lr"] == pytest.approx(1e6 * 1e-8)
+    for leaf in jax.tree.leaves(res.params):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+    hist = sim.history(res)
+    assert any(h.get("event") == "rollback" for h in hist)
+    assert [h["round"] for h in hist if "event" not in h] == [0, 1, 2, 3]
+
+
+def test_engine_segment_divergence_exhaustion_raises(tmp_path):
+    loss, p0, _, store = _explosive_setup()
+    cfg = _cfg(lr=1e6, local_iters=2)
+    with pytest.raises(DivergenceError) as ei:
+        sim.run_experiment(loss, p0, store, cfg, 4, checkpoint_every=2,
+                           checkpoint_dir=str(tmp_path / "ck"),
+                           max_retries=2, lr_backoff=1.0, donate=False)
+    assert ei.value.retries == 2 and ei.value.round == 2
+
+
+# ---------------------------------------------------------------------------
+# model validation
+
+
+def test_fault_model_validation():
+    with pytest.raises(ValueError, match="corrupt_mode"):
+        FaultModel(corrupt_mode="garbage")
+    with pytest.raises(ValueError, match="p_fail"):
+        FaultModel(p_fail=1.5)
+    with pytest.raises(ValueError, match="store"):
+        clients, _ = _setup()
+        FedServer(softmax_loss, softmax_init(None, 24, 4), clients, _cfg(),
+                  faults=FaultModel())
