@@ -23,6 +23,7 @@ def main() -> None:
               ("zo_path", zo_path_bench.run),
               ("round", round_bench.run),
               ("sim", sim_bench.run),
+              ("algos", sim_bench.run_algos),
               ("workloads", workloads_bench.run),
               ("roofline", roofline_report.run)]
     if not args.quick:

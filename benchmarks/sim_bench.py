@@ -70,10 +70,10 @@ R = 10
 fn = sim.make_experiment_fn(softmax_loss, cfg, R, round_fn=rf, donate=False)
 key = sim.experiment_key(cfg)
 p = softmax_init(None)
-out = fn(p, None, key, None, store)
+out = fn(p, None, key, None, None, store)
 jax.block_until_ready(out[0])
 t0 = time.perf_counter()
-out = fn(p, None, key, None, store)
+out = fn(p, None, key, None, None, store)
 jax.block_until_ready(out[0])
 print("US_PER_ROUND", (time.perf_counter() - t0) / R * 1e6)
 """
@@ -117,10 +117,10 @@ def run():
     fn = sim.make_experiment_fn(softmax_loss, fcfg, ROUNDS, donate=False)
     key = sim.experiment_key(fcfg)
     p0 = softmax_init(None)
-    out = fn(p0, None, key, None, store)              # compile
+    out = fn(p0, None, key, None, None, store)        # compile
     jax.block_until_ready(out[0])
     t0 = time.perf_counter()
-    out = fn(p0, None, key, None, store)
+    out = fn(p0, None, key, None, None, store)
     jax.block_until_ready(out[0])
     eng_us = (time.perf_counter() - t0) / ROUNDS * 1e6
     rows.append(("sim/engine_us_per_round", eng_us, ROUNDS))
@@ -129,10 +129,10 @@ def run():
     # -- engine scanning the UNCHANGED loop-estimator round -------------------
     r_loop = max(2, ROUNDS // 10)
     fn2 = sim.make_experiment_fn(softmax_loss, cfg, r_loop, donate=False)
-    out = fn2(p0, None, sim.experiment_key(cfg), None, store)
+    out = fn2(p0, None, sim.experiment_key(cfg), None, None, store)
     jax.block_until_ready(out[0])
     t0 = time.perf_counter()
-    out = fn2(p0, None, sim.experiment_key(cfg), None, store)
+    out = fn2(p0, None, sim.experiment_key(cfg), None, None, store)
     jax.block_until_ready(out[0])
     rows.append(("sim/engine_loop_est_us_per_round",
                  (time.perf_counter() - t0) / r_loop * 1e6, r_loop))
@@ -143,10 +143,10 @@ def run():
     fstate = faults.init_state(store.n_clients)
     fnf = sim.make_experiment_fn(softmax_loss, fcfg, ROUNDS, faults=faults,
                                  donate=False)
-    out = fnf(p0, None, key, fstate, store)           # compile
+    out = fnf(p0, None, key, fstate, None, store)     # compile
     jax.block_until_ready(out[0])
     t0 = time.perf_counter()
-    out = fnf(p0, None, key, fstate, store)
+    out = fnf(p0, None, key, fstate, None, store)
     jax.block_until_ready(out[0])
     faults_us = (time.perf_counter() - t0) / ROUNDS * 1e6
     rows.append(("sim/engine_faults_us_per_round", faults_us, ROUNDS))
@@ -161,4 +161,62 @@ def run():
             rows.append((f"sim/sharded_dev{n_dev}_us_per_round", us, n_dev))
         except Exception as e:  # noqa: BLE001 — report, don't sink the suite
             rows.append((f"sim/sharded_dev{n_dev}_ERROR", 0.0, repr(e)[:60]))
+    return rows
+
+
+# strategy-name -> config overrides on top of the fast engine plan; every
+# variant runs the SAME experiment shape so overhead-vs-fedzo is pure
+# algorithm cost (loss wrap, state gather/scatter, server correction)
+ALGO_VARIANTS = (
+    ("fedzo", {}),
+    ("fedprox", {"strategy": "fedprox", "prox_mu": 0.01}),
+    ("feddyn", {"strategy": "feddyn", "dyn_alpha": 0.01}),
+    ("scaffold", {"strategy": "scaffold"}),
+    ("fedzo_surrogate", {"direction_conv": "surrogate"}),
+)
+
+
+def run_algos():
+    """Per-strategy engine cost: µs/round for each registered ZO strategy
+    (+ the surrogate estimator) on the quickstart experiment under the fast
+    engine plan, plus its overhead vs plain FedZO in %. Also snapshots the
+    rows to ``results/BENCH_algos.json`` so the per-PR perf trajectory of
+    the strategy layer is tracked instead of re-measured ad hoc."""
+    import dataclasses
+    import json
+
+    from repro import sim
+    from repro.models.simple import softmax_init, softmax_loss
+
+    rows = []
+    clients, cfg = _quickstart_setup()
+    store = sim.build_store(clients)
+    rounds = max(2, ROUNDS // 2)
+    base_us = None
+    for name, overrides in ALGO_VARIANTS:
+        acfg = dataclasses.replace(sim.fast_sim_config(cfg), **overrides)
+        fn = sim.make_experiment_fn(softmax_loss, acfg, rounds, donate=False)
+        key = sim.experiment_key(acfg)
+        p0 = softmax_init(None)
+        from repro.core import strategy as strategy_mod
+        zstate = strategy_mod.get(acfg.strategy).init_state(p0, acfg,
+                                                            store.n_clients)
+        out = fn(p0, None, key, None, zstate, store)      # compile
+        jax.block_until_ready(out[0])
+        t0 = time.perf_counter()
+        out = fn(p0, None, key, None, zstate, store)
+        jax.block_until_ready(out[0])
+        us = (time.perf_counter() - t0) / rounds * 1e6
+        rows.append((f"algos/{name}_us_per_round", us, rounds))
+        if name == "fedzo":
+            base_us = us
+        else:
+            rows.append((f"algos/{name}_overhead_vs_fedzo_pct", 0.0,
+                         (us / base_us - 1.0) * 100.0))
+
+    os.makedirs("results", exist_ok=True)
+    with open(os.path.join("results", "BENCH_algos.json"), "w") as f:
+        json.dump({"rounds": rounds,
+                   "rows": [{"name": n, "us_per_call": u, "derived": d}
+                            for n, u, d in rows]}, f, indent=2)
     return rows

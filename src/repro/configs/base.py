@@ -181,3 +181,22 @@ class FedZOConfig:
     weight_by_size: bool = False
     # beyond-paper: upload {seeds, coefficients} instead of dense deltas
     delta_compression: str = "dense"  # dense | seed
+    # algorithm strategy (core/strategy.py): fedzo (paper) | fedavg |
+    # fedprox | feddyn | scaffold — the registry's composable round
+    # decomposition. The engine, server, and sweeps all resolve this field
+    # unless an explicit strategy= is passed.
+    strategy: str = "fedzo"
+    # ZO-FedProx proximal weight: local loss + (prox_mu/2)·‖x − x_t‖².
+    # 0 reduces to FedZO bit-exactly (the penalty is statically elided).
+    prox_mu: float = 0.0
+    # ZO-FedDyn regularizer α (Acar et al. 2021): local loss
+    # − ⟨h_i, x⟩ + (α/2)·‖x − x_t‖² with per-client duals h_i and the
+    # server correction x ← x̄ − h/α. 0 reduces to FedZO bit-exactly.
+    dyn_alpha: float = 0.0
+    # trajectory-informed surrogate estimator (direction_conv="surrogate",
+    # FedZOO-style, arXiv 2308.04077): per local iterate only
+    # ceil(b2·surrogate_fraction) fresh ZO queries are paid; the update
+    # direction is the EW blend g ← β·g + (1−β)·g_fresh over the iterate
+    # history. Requires cfg.batch_directions (the wide phase).
+    surrogate_beta: float = 0.5
+    surrogate_fraction: float = 0.5

@@ -23,12 +23,23 @@ from repro.core import estimator
 from repro.utils.tree import tree_add, tree_axpy, tree_scale
 
 
-def zo_sgd_step(loss_fn, params, batch, rng, *, lr, mu, b2=1, kind="sphere"):
-    """Centralized ZO-SGD step."""
+def zo_sgd_step(loss_fn, params, batch, rng, *, lr, mu, b2=1, kind="sphere",
+                conv="tree", direction_dtype=jnp.float32):
+    """Centralized ZO-SGD step.
+
+    ``conv``/``direction_dtype`` route through the shared estimator
+    direction conventions (tree | counter), so a baseline trajectory under
+    the counter convention replays the directions the flat/engine paths
+    draw — previously the kwargs were silently dropped and every call ran
+    the per-leaf tree convention regardless of the experiment config.
+    """
+    ddt = jnp.dtype(direction_dtype)
     coeffs, base = estimator.coefficients(loss_fn, params, batch, rng,
-                                          mu=mu, b2=b2, kind=kind)
+                                          mu=mu, b2=b2, kind=kind,
+                                          direction_dtype=ddt, conv=conv)
     params = estimator.apply_coefficients(params, rng, coeffs, scale=-lr,
-                                          kind=kind)
+                                          kind=kind, direction_dtype=ddt,
+                                          conv=conv)
     return params, base
 
 
@@ -39,13 +50,19 @@ def dzopa_round(loss_fn, client_params, client_batches, client_rngs,
     client_params: pytree with leading [N] axis (per-agent iterates).
     Returns (new_client_params, mean_loss). One ZO update per agent per
     round (H=1 by construction — DZOPA has no local-update loop).
+    Directions follow ``cfg.direction_conv``/``cfg.direction_dtype`` like
+    every FedZO path, so baseline-vs-FedZO comparisons run one convention.
     """
+    ddt = jnp.dtype(cfg.direction_dtype)
+
     def one(params, batch, rng):
         coeffs, base = estimator.coefficients(
             loss_fn, params, batch, rng, mu=cfg.mu, b2=cfg.b2,
-            kind=cfg.estimator)
+            kind=cfg.estimator, direction_dtype=ddt, conv=cfg.direction_conv)
         upd = estimator.apply_coefficients(params, rng, coeffs, scale=-cfg.lr,
-                                           kind=cfg.estimator)
+                                           kind=cfg.estimator,
+                                           direction_dtype=ddt,
+                                           conv=cfg.direction_conv)
         return upd, base
 
     updated, losses = jax.vmap(one)(client_params, client_batches, client_rngs)
@@ -56,14 +73,20 @@ def dzopa_round(loss_fn, client_params, client_batches, client_rngs,
     return mixed, jnp.mean(losses)
 
 
-def zone_s_round(loss_fn, params, batch, rng, *, rho, mu, b2=1, kind="sphere"):
+def zone_s_round(loss_fn, params, batch, rng, *, rho, mu, b2=1, kind="sphere",
+                 conv="tree", direction_dtype=jnp.float32):
     """One ZONE-S iteration: one sampled agent, penalty-ρ primal step.
 
     The caller samples the agent (and its batch); the step is
     x ← x − (1/ρ)·e_i with e_i the agent's mini-batch ZO estimator.
+    ``conv``/``direction_dtype`` route through the shared direction
+    conventions (see ``zo_sgd_step``).
     """
+    ddt = jnp.dtype(direction_dtype)
     coeffs, base = estimator.coefficients(loss_fn, params, batch, rng,
-                                          mu=mu, b2=b2, kind=kind)
+                                          mu=mu, b2=b2, kind=kind,
+                                          direction_dtype=ddt, conv=conv)
     params = estimator.apply_coefficients(params, rng, coeffs,
-                                          scale=-1.0 / rho, kind=kind)
+                                          scale=-1.0 / rho, kind=kind,
+                                          direction_dtype=ddt, conv=conv)
     return params, base

@@ -130,13 +130,77 @@ def _flat_phase_scan(loss_fn, buf0, spec, br, keys, batches, cfg):
     return buf, coeffs, losses
 
 
+def _check_surrogate(cfg: FedZOConfig):
+    if cfg.direction_conv == "surrogate" and not cfg.batch_directions:
+        raise ValueError(
+            "direction_conv='surrogate' runs on the batched-direction "
+            "(wide) local phase — set cfg.batch_directions=True")
+
+
+def surrogate_queries(cfg: FedZOConfig) -> int:
+    """Fresh perturbed-loss queries per local iterate under the surrogate
+    estimator (direction_conv="surrogate"): ceil(b2·surrogate_fraction),
+    at least 1. The single source of truth shared by the phase scan and the
+    query-budget acceptance test."""
+    return max(1, int(round(cfg.b2 * cfg.surrogate_fraction)))
+
+
+def _surrogate_phase_scan(loss_fn, buf0, spec, keys, batches, cfg):
+    """Trajectory-informed surrogate local phase (FedZOO-style,
+    arXiv 2308.04077): instead of b2 fresh directions per iterate, pay only
+    ``surrogate_queries(cfg)`` fresh ZO queries and blend the fresh estimate
+    into a running surrogate gradient carried along the local trajectory:
+
+        g ← β·g + (1−β)·ĝ_fresh,   x ← x − η·g
+
+    The replay history already flowing through the phase (the per-iterate
+    (direction, finite-difference) pairs) is what the surrogate memorizes —
+    an exponentially-weighted rank-|history| fit, the cheap end of FedZOO's
+    quadratic surrogate family. Returns (final buf, coeffs [H, b2q],
+    losses [H]); the coeffs are NOT seed-replayable (seedcomm rejects
+    non-tree wide convs already)."""
+    mu = jnp.float32(cfg.mu)
+    scale = estimator._scale_factor(spec.d, cfg.estimator)
+    b2q = surrogate_queries(cfg)
+    beta = jnp.float32(cfg.surrogate_beta)
+
+    def step(carry, inp):
+        buf, g_hat, t = carry
+        k, batch = inp
+        V, inv = estimator.direction_block(k, spec, b2q, kind=cfg.estimator,
+                                           conv="block")
+        base = loss_fn(unflatten(buf, spec), batch)
+        lp = jax.vmap(lambda v, s: loss_fn(
+            unflatten(buf + (mu * s) * v, spec), batch))(V, inv)
+        if cfg.central:
+            lm = jax.vmap(lambda v, s: loss_fn(
+                unflatten(buf - (mu * s) * v, spec), batch))(V, inv)
+            coeffs = scale * (lp - lm).astype(jnp.float32) / (2 * mu)
+        else:
+            coeffs = scale * (lp - base).astype(jnp.float32) / mu
+        g_fresh = ((coeffs * inv) @ V) / b2q
+        # first iterate: no history yet, the surrogate IS the fresh estimate
+        w = jnp.where(t == 0, 0.0, beta)
+        g_hat = w * g_hat + (1.0 - w) * g_fresh
+        buf = buf - cfg.lr * g_hat
+        return (buf, g_hat, t + 1), (coeffs, base)
+
+    (buf, _, _), (coeffs, losses) = jax.lax.scan(
+        step, (buf0, jnp.zeros_like(buf0), jnp.int32(0)), (keys, batches))
+    return buf, coeffs, losses
+
+
 def _wide_phase_scan(loss_fn, buf0, spec, keys, batches, cfg, like=None):
     """Scan H batched-direction ("wide") iterates over a flat buffer — the
     simulation engine's local phase (DESIGN.md §9). Per step: ONE direction
     block [b2, n_pad], the b2 perturbed forwards as one vmap (XLA batches
     them), and the update as one matvec. Statistically identical to the
     loop estimator; walks its exact directions when direction_conv="tree".
+    direction_conv="surrogate" swaps in the trajectory-informed surrogate
+    phase (fewer fresh queries, EW-blended update direction).
     Returns (final buf, coeffs [H, b2], losses [H])."""
+    if cfg.direction_conv == "surrogate":
+        return _surrogate_phase_scan(loss_fn, buf0, spec, keys, batches, cfg)
     mu = jnp.float32(cfg.mu)
     scale = estimator._scale_factor(spec.d, cfg.estimator)
     conv = "tree" if cfg.direction_conv == "tree" else "block"
@@ -171,6 +235,7 @@ def local_phase(loss_fn, params, batches, rng, cfg: FedZOConfig) -> LocalResult:
     run on the single flat buffer.
     """
     keys = jax.random.split(rng, cfg.local_iters)
+    _check_surrogate(cfg)
 
     if cfg.batch_directions:
         spec, _ = _wide_setup(params, cfg)
@@ -203,7 +268,8 @@ def client_delta(loss_fn, params, batches, rng, cfg) -> tuple:
 
 def round_simulated(loss_fn, server_params, client_batches, client_rngs,
                     cfg: FedZOConfig, *, channel_rng=None, momentum=None,
-                    weights=None, faults=None):
+                    weights=None, faults=None, cstate=None, loss_wrap=None,
+                    state_fn=None):
     """One full communication round over the M sampled clients (vmapped).
 
     client_batches: pytree with leading [M, H, ...] axes.
@@ -234,8 +300,28 @@ def round_simulated(loss_fn, server_params, client_batches, client_rngs,
     aggregation and the surviving-client mask composes with the channel
     mask, so dropped/straggling/poisoned clients are excluded from the
     mean and Δ_max exactly like channel-masked ones (DESIGN.md §12).
+
+    Strategy hooks (core/strategy.py, DESIGN.md §13) — all default None,
+    in which case every code path above is byte-for-byte the plain FedZO
+    round:
+
+    - ``cstate``: the [M, ...] per-client strategy state of the sampled
+      cohort (SCAFFOLD control variates, FedDyn duals), vmapped alongside
+      the batches; the (possibly updated) cohort state is appended to the
+      return tuple whenever ``cstate`` is passed.
+    - ``loss_wrap(loss_fn, cst) -> loss_fn'`` wraps the ZO loss query per
+      client (proximal term, dynamic regularizer) — the estimator itself
+      is untouched.
+    - ``state_fn(deltas, cstate, spec) -> (deltas', cstate')`` is the
+      client-side post-phase delta correction, applied in flat [M, n_pad]
+      space on the flat/wide paths (``spec`` set) and on the stacked delta
+      pytree otherwise (``spec=None``) — BEFORE fault corruption and the
+      aggregation, so it composes with AirComp, scheduling, weighting,
+      and the sharded reduce unchanged.
     """
     M = client_rngs.shape[0]
+    _check_surrogate(cfg)
+    new_cstate = cstate
     mask = None
     noise_rng = channel_rng
     air_stats = {}
@@ -250,19 +336,24 @@ def round_simulated(loss_fn, server_params, client_batches, client_rngs,
         keys = jax.vmap(lambda r: jax.random.split(r, cfg.local_iters))(
             client_rngs)
 
-        if cfg.batch_directions:
-            def one_client(batches, ks):
-                buf, _, base = _wide_phase_scan(loss_fn, buf0, spec, ks,
-                                                batches, cfg,
-                                                like=server_params)
-                return buf - buf0, base
-        else:
-            def one_client(batches, ks):
-                buf, _, base = _flat_phase_scan(loss_fn, buf0, spec, br, ks,
+        def one_client(batches, ks, cst=None):
+            lf = loss_wrap(loss_fn, cst) if loss_wrap is not None else loss_fn
+            if cfg.batch_directions:
+                buf, _, base = _wide_phase_scan(lf, buf0, spec, ks, batches,
+                                                cfg, like=server_params)
+            else:
+                buf, _, base = _flat_phase_scan(lf, buf0, spec, br, ks,
                                                 batches, cfg)
-                return buf - buf0, base
+            return buf - buf0, base
 
-        deltas, losses = jax.vmap(one_client)(client_batches, keys)
+        if cstate is not None:
+            deltas, losses = jax.vmap(one_client)(client_batches, keys,
+                                                  cstate)
+        else:
+            deltas, losses = jax.vmap(one_client)(client_batches, keys)
+
+        if state_fn is not None:
+            deltas, new_cstate = state_fn(deltas, cstate, spec)
 
         if faults is not None:
             deltas, fmask = faults.apply_flat(deltas)
@@ -280,12 +371,19 @@ def round_simulated(loss_fn, server_params, client_batches, client_rngs,
             agg_flat = jnp.mean(deltas, axis=0)
         agg = unflatten(agg_flat, spec)
     else:
-        def one_client(batches, rng):
-            delta, res = client_delta(loss_fn, server_params, batches, rng,
-                                      cfg)
+        def one_client(batches, rng, cst=None):
+            lf = loss_wrap(loss_fn, cst) if loss_wrap is not None else loss_fn
+            delta, res = client_delta(lf, server_params, batches, rng, cfg)
             return delta, res.losses
 
-        deltas, losses = jax.vmap(one_client)(client_batches, client_rngs)
+        if cstate is not None:
+            deltas, losses = jax.vmap(one_client)(client_batches,
+                                                  client_rngs, cstate)
+        else:
+            deltas, losses = jax.vmap(one_client)(client_batches, client_rngs)
+
+        if state_fn is not None:
+            deltas, new_cstate = state_fn(deltas, cstate, None)
 
         if faults is not None:
             deltas, fmask = faults.apply_tree(deltas)
@@ -318,9 +416,12 @@ def round_simulated(loss_fn, server_params, client_batches, client_rngs,
         air_stats["m_corrupt"] = faults.n_corrupt
     metrics = {"mean_local_loss": jnp.mean(losses),
                "first_loss": jnp.mean(losses[:, 0]), **air_stats}
+    out = (new_params, metrics)
     if momentum is not None:
-        return new_params, metrics, momentum
-    return new_params, metrics
+        out = out + (momentum,)
+    if cstate is not None:
+        out = out + (new_cstate,)
+    return out
 
 
 def make_pod_round_step(loss_fn_grouped, cfg: FedZOConfig, mesh) -> Callable:

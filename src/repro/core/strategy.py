@@ -1,0 +1,347 @@
+"""Composable algorithm strategies (DESIGN.md §13).
+
+One communication round decomposes into four pluggable pieces, all wired
+through the SAME simulated round (``fedzo.round_simulated``) so every
+aggregation path — pytree / flat Pallas / wide batched-direction / AirComp
+/ channel-truncation scheduling / size weighting / the sharded psum — is
+shared by every algorithm:
+
+- **loss transform** — wraps the ZO loss query per client (FedProx's
+  proximal term, FedDyn's dynamic regularizer) so the estimator itself is
+  untouched; the finite-difference machinery never sees the algorithm.
+- **client state** — a fixed-shape per-client pytree stacked ``[N, ...]``
+  (SCAFFOLD control variates, FedDyn duals), threaded through the
+  experiment-scan carry exactly like ``FaultModel`` state: the round
+  gathers the sampled cohort's rows, updates them, scatters them back.
+- **delta transform** — a post-local-phase correction applied in flat
+  ``[M, n_pad]`` space on the flat/wide paths (stacked pytree otherwise),
+  BEFORE fault corruption and aggregation, so it composes with AirComp,
+  scheduling, weighting, and the sharded reduce unchanged.
+- **server update** — the post-aggregation step (momentum/lr, SCAFFOLD's
+  global control, FedDyn's ``x ← x̄ − h/α``), applied at the round-step
+  level from the recovered aggregate ``Δ̄ = x' − x_t``.
+
+``AlgoStrategy`` (the base class) IS FedZO: every hook defaults to None
+and ``run_round`` reproduces the engine's historical round branch
+byte-for-byte — the golden fixtures and the host≡engine matrix pin that.
+The registry (``get``/``register``) is what ``sim.engine.make_round_step``
+dispatches on; ``resolve`` additionally honors the deprecated ``algo=``
+string kwarg and falls back to ``cfg.strategy``.
+
+Reductions (pinned bit-exactly by tests/test_strategy.py): ZO-FedProx with
+``prox_mu=0`` and ZO-FedDyn with ``dyn_alpha=0`` statically elide their
+hooks and run the base FedZO round unchanged.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedZOConfig
+from repro.core import fedavg, fedzo
+from repro.utils.flatparams import flatten, unflatten
+from repro.utils.tree import tree_dot, tree_sub, tree_zeros_like
+
+
+def _static_positive(x, name: str = "server_momentum") -> bool:
+    """cfg fields compared against 0 at trace time must be static — a
+    sweep-vmapped (traced) value here would silently change the program
+    structure, so reject it loudly."""
+    if isinstance(x, jax.core.Tracer):
+        raise ValueError(f"{name} selects the round program structure and "
+                         f"cannot be swept/vmapped — keep it static")
+    return x > 0
+
+
+def _sq_diff(a, b):
+    """Σ‖a − b‖² over a pytree pair, fp32."""
+    return sum(jnp.sum(jnp.square(la.astype(jnp.float32) -
+                                  lb.astype(jnp.float32)))
+               for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _stack_zeros(template, n: int):
+    """[n, ...]-stacked zeros_like of a pytree template."""
+    return jax.tree.map(lambda l: jnp.zeros((n,) + l.shape, l.dtype),
+                        template)
+
+
+class AlgoStrategy:
+    """Base strategy == plain FedZO (paper Algorithm 1).
+
+    Subclasses override the hooks (or ``run_round`` wholesale). The engine
+    calls, per round::
+
+        params', metrics, momentum', zstate' = strat.run_round(
+            loss_fn, params, batches, k_zo, cfg, channel_rng=..,
+            momentum=.., zstate=.., idx=.., round_fn=.., **wkw)
+
+    ``zstate`` is the strategy's carry slot — ``None`` for stateless
+    strategies, else ``{"client": [N, ...] stacked pytree, "server":
+    pytree}``; ``idx`` the round's sampled client indices ([M] int32).
+    """
+    name = "fedzo"
+    stateful = False
+    # custom round_fns (the clients-mesh sharded round) replace
+    # fedzo.round_simulated wholesale and know nothing of strategy hooks
+    supports_round_fn = True
+
+    def validate(self, cfg: FedZOConfig):
+        """Static config validation at round-step build time."""
+
+    def has_momentum(self, cfg: FedZOConfig) -> bool:
+        return _static_positive(cfg.server_momentum)
+
+    def init_state(self, params, cfg: FedZOConfig, n_clients: int):
+        """Round-0 strategy carry (None when the strategy is stateless)."""
+        return None
+
+    def run_round(self, loss_fn, params, batches, k_zo, cfg: FedZOConfig, *,
+                  channel_rng=None, momentum=None, zstate=None, idx=None,
+                  round_fn=None, **wkw):
+        fz = round_fn if round_fn is not None else fedzo.round_simulated
+        rngs = jax.random.split(k_zo, cfg.n_participating)
+        if self.has_momentum(cfg):
+            params, metrics, momentum = fz(
+                loss_fn, params, batches, rngs, cfg, channel_rng=channel_rng,
+                momentum=momentum, **wkw)
+        else:
+            params, metrics = fz(loss_fn, params, batches, rngs, cfg,
+                                 channel_rng=channel_rng, **wkw)
+        return params, metrics, momentum, zstate
+
+
+class FedAvgStrategy(AlgoStrategy):
+    """First-order FedAvg baseline as a strategy (no ZO keys, no momentum
+    carry) — byte-identical to the engine's historical fedavg branch."""
+    name = "fedavg"
+
+    def has_momentum(self, cfg):
+        return False
+
+    def run_round(self, loss_fn, params, batches, k_zo, cfg, *,
+                  channel_rng=None, momentum=None, zstate=None, idx=None,
+                  round_fn=None, **wkw):
+        params, metrics = fedavg.round_simulated(
+            loss_fn, params, batches, cfg, channel_rng=channel_rng, **wkw)
+        return params, metrics, momentum, zstate
+
+
+class ZOFedProx(AlgoStrategy):
+    """ZO-FedProx: the FedZO round with the proximal term
+    (prox_mu/2)·‖x − x_t‖² folded into every local ZO loss query.
+    Stateless; composes with server momentum like FedZO. ``prox_mu=0``
+    statically elides the wrap — bit-exact FedZO."""
+    name = "fedprox"
+    supports_round_fn = False
+
+    def run_round(self, loss_fn, params, batches, k_zo, cfg, *,
+                  channel_rng=None, momentum=None, zstate=None, idx=None,
+                  round_fn=None, **wkw):
+        if not _static_positive(cfg.prox_mu, "prox_mu"):
+            return super().run_round(
+                loss_fn, params, batches, k_zo, cfg, channel_rng=channel_rng,
+                momentum=momentum, zstate=zstate, idx=idx, round_fn=round_fn,
+                **wkw)
+        half_mu = 0.5 * cfg.prox_mu
+
+        def loss_wrap(lf, cst):
+            del cst
+            return lambda p, b: lf(p, b) + half_mu * _sq_diff(p, params)
+
+        rngs = jax.random.split(k_zo, cfg.n_participating)
+        if self.has_momentum(cfg):
+            params_new, metrics, momentum = fedzo.round_simulated(
+                loss_fn, params, batches, rngs, cfg, channel_rng=channel_rng,
+                momentum=momentum, loss_wrap=loss_wrap, **wkw)
+        else:
+            params_new, metrics = fedzo.round_simulated(
+                loss_fn, params, batches, rngs, cfg, channel_rng=channel_rng,
+                loss_wrap=loss_wrap, **wkw)
+        return params_new, metrics, momentum, zstate
+
+
+class _StatefulZO(AlgoStrategy):
+    """Shared plumbing for strategies with a per-client + server state."""
+    stateful = True
+    supports_round_fn = False
+
+    def validate(self, cfg):
+        self.has_momentum(cfg)  # rejects cfg.server_momentum > 0
+
+    def has_momentum(self, cfg):
+        if _static_positive(cfg.server_momentum):
+            raise ValueError(
+                f"strategy {self.name!r} carries its own server-side "
+                f"control state and does not compose with "
+                f"cfg.server_momentum — run momentum through fedzo/fedprox")
+        return False
+
+    def _gather(self, zstate, idx):
+        return jax.tree.map(lambda a: a[idx], zstate["client"])
+
+    def _scatter(self, zstate, idx, cohort):
+        client = jax.tree.map(
+            lambda a, u: a.at[idx].set(u.astype(a.dtype)),
+            zstate["client"], cohort)
+        return client
+
+
+class ZOFedDyn(_StatefulZO):
+    """ZO-FedDyn (Acar et al. 2021, zeroth-order form). Per client i the
+    local ZO loss query becomes  L(x) − ⟨h_i, x⟩ + (α/2)‖x − x_t‖²  and the
+    dual is refreshed client-side from its own delta, h_i ← h_i − α·Δ_i.
+    The server keeps the running correction h ← h − α·(M/N)·Δ̄ and steps
+    x ← (x_t + Δ̄) − h/α. ``dyn_alpha=0`` statically elides everything —
+    bit-exact FedZO."""
+    name = "feddyn"
+
+    def init_state(self, params, cfg, n_clients):
+        if not _static_positive(cfg.dyn_alpha, "dyn_alpha"):
+            return None
+        return {"client": _stack_zeros(params, n_clients),
+                "server": tree_zeros_like(params)}
+
+    def run_round(self, loss_fn, params, batches, k_zo, cfg, *,
+                  channel_rng=None, momentum=None, zstate=None, idx=None,
+                  round_fn=None, **wkw):
+        a = cfg.dyn_alpha
+        if not _static_positive(a, "dyn_alpha"):
+            return super().run_round(
+                loss_fn, params, batches, k_zo, cfg, channel_rng=channel_rng,
+                momentum=momentum, zstate=zstate, idx=idx, round_fn=round_fn,
+                **wkw)
+        rngs = jax.random.split(k_zo, cfg.n_participating)
+        cohort = self._gather(zstate, idx)
+
+        def loss_wrap(lf, h_i):
+            return lambda p, b: (lf(p, b) - tree_dot(h_i, p)
+                                 + (0.5 * a) * _sq_diff(p, params))
+
+        def state_fn(deltas, h, spec):
+            d_tree = (jax.vmap(lambda row: unflatten(row, spec))(deltas)
+                      if spec is not None else deltas)
+            new_h = jax.tree.map(lambda hi, d: (hi - a * d).astype(hi.dtype),
+                                 h, d_tree)
+            return deltas, new_h
+
+        params_new, metrics, new_cohort = fedzo.round_simulated(
+            loss_fn, params, batches, rngs, cfg, channel_rng=channel_rng,
+            cstate=cohort, loss_wrap=loss_wrap, state_fn=state_fn, **wkw)
+        # server update from the recovered aggregate Δ̄ = x' − x_t — works
+        # under every aggregation path because Δ̄ is whatever aggregation
+        # produced (AirComp noise, masking, weighting included)
+        agg = tree_sub(params_new, params)
+        frac = cfg.n_participating / cfg.n_devices
+        hs = jax.tree.map(lambda h, d: (h - (a * frac) * d).astype(h.dtype),
+                          zstate["server"], agg)
+        params_new = jax.tree.map(lambda p, h: (p - h / a).astype(p.dtype),
+                                  params_new, hs)
+        return params_new, metrics, momentum, {
+            "client": self._scatter(zstate, idx, new_cohort), "server": hs}
+
+
+class ZOScaffold(_StatefulZO):
+    """ZO-SCAFFOLD (Karimireddy et al. 2020, option II, zeroth-order
+    post-phase form). The variance-reduction correction −lr·(c − c_i) per
+    local step is constant across the H iterates, so it is applied ONCE in
+    delta space: Δ_i ← Δ_zo,i − lr·H·(c − c_i) — exactly equivalent to the
+    per-iterate form, and it composes with the wide phase, AirComp, and the
+    sharded reduce untouched. The refreshed client control is then
+    c_i⁺ = −Δ_zo,i/(lr·H) and the server control moves by
+    c ← c + (M/N)·mean_i(c_i⁺ − c_i)."""
+    name = "scaffold"
+
+    def init_state(self, params, cfg, n_clients):
+        return {"client": _stack_zeros(params, n_clients),
+                "server": tree_zeros_like(params)}
+
+    def run_round(self, loss_fn, params, batches, k_zo, cfg, *,
+                  channel_rng=None, momentum=None, zstate=None, idx=None,
+                  round_fn=None, **wkw):
+        rngs = jax.random.split(k_zo, cfg.n_participating)
+        cohort = self._gather(zstate, idx)
+        c = zstate["server"]
+        eta = cfg.lr * cfg.local_iters  # total local step length lr·H
+
+        def state_fn(deltas, c_i, spec):
+            if spec is not None:
+                c_flat = flatten(c, spec)
+                ci_flat = jax.vmap(lambda t: flatten(t, spec))(c_i)
+                new_deltas = deltas - eta * (c_flat[None, :] - ci_flat)
+                new_ci = jax.tree.map(
+                    lambda ref, u: u.astype(ref.dtype), c_i,
+                    jax.vmap(lambda row: unflatten(row, spec))(
+                        (-1.0 / eta) * deltas))
+            else:
+                new_deltas = jax.tree.map(
+                    lambda d, cc, cic: (d - eta * (cc[None] - cic)
+                                        ).astype(d.dtype),
+                    deltas, c, c_i)
+                new_ci = jax.tree.map(
+                    lambda cic, d: ((-1.0 / eta) * d).astype(cic.dtype),
+                    c_i, deltas)
+            return new_deltas, new_ci
+
+        params_new, metrics, new_cohort = fedzo.round_simulated(
+            loss_fn, params, batches, rngs, cfg, channel_rng=channel_rng,
+            cstate=cohort, state_fn=state_fn, **wkw)
+        frac = cfg.n_participating / cfg.n_devices
+        dmean = jax.tree.map(
+            lambda n_, o: jnp.mean(n_.astype(jnp.float32) -
+                                   o.astype(jnp.float32), axis=0),
+            new_cohort, cohort)
+        c_new = jax.tree.map(lambda cc, d: (cc + frac * d).astype(cc.dtype),
+                             c, dmean)
+        return params_new, metrics, momentum, {
+            "client": self._scatter(zstate, idx, new_cohort),
+            "server": c_new}
+
+
+# ---------------------------------------------------------------------------
+# registry
+
+STRATEGIES: dict = {}
+
+
+def register(strat: AlgoStrategy) -> AlgoStrategy:
+    """Register a strategy instance under its ``name`` (last write wins —
+    deliberate, so downstream code can swap in a tuned variant)."""
+    STRATEGIES[strat.name] = strat
+    return strat
+
+
+register(AlgoStrategy())
+register(FedAvgStrategy())
+register(ZOFedProx())
+register(ZOFedDyn())
+register(ZOScaffold())
+
+
+def get(name: str) -> AlgoStrategy:
+    """Look up a registered strategy by name, loudly."""
+    try:
+        return STRATEGIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown strategy {name!r}; registered strategies: "
+            f"{sorted(STRATEGIES)}") from None
+
+
+def resolve(strategy=None, algo: Optional[str] = None,
+            cfg: Optional[FedZOConfig] = None) -> AlgoStrategy:
+    """Resolution order for the engine entry points: an explicit
+    ``strategy`` (name or instance) wins; the legacy ``algo=`` string is
+    honored with a DeprecationWarning; otherwise ``cfg.strategy``."""
+    if strategy is not None:
+        return get(strategy) if isinstance(strategy, str) else strategy
+    if algo is not None:
+        warnings.warn(
+            "the algo= string kwarg is deprecated — pass strategy="
+            "(a name or AlgoStrategy) or set cfg.strategy",
+            DeprecationWarning, stacklevel=3)
+        return get(algo)
+    return get(cfg.strategy if cfg is not None else "fedzo")

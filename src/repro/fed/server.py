@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.configs.base import FedZOConfig
 from repro.core import aircomp, fedavg, fedzo, seedcomm
+from repro.core import strategy as strategy_mod
 from repro.data.synthetic import sample_local_batches
 from repro.sim.faults import DivergenceError, FaultModel
 from repro.utils.tree import tree_add, tree_bytes, tree_zeros_like
@@ -38,7 +39,11 @@ class FedServer:
     params: object               # global model x^t
     clients: Optional[list]      # list of {"x": ..., "y": ...} datasets
     cfg: FedZOConfig
-    algo: str = "fedzo"          # fedzo | fedavg
+    # algorithm selection: ``strategy`` (registry name or AlgoStrategy)
+    # wins, then the legacy ``algo`` string, then cfg.strategy. After init
+    # ``self.algo`` always holds the resolved name.
+    algo: Optional[str] = None
+    strategy: Optional[object] = None
     eval_fn: Optional[Callable] = None   # host-side, may sync (python loop)
     history: list = field(default_factory=list)
     store: Optional[object] = None       # sim.ClientStore → engine driver
@@ -69,6 +74,18 @@ class FedServer:
             raise ValueError(
                 f"cfg.n_participating={self.cfg.n_participating} exceeds "
                 f"the federation size N={n}")
+        sel = (self.strategy if self.strategy is not None
+               else (self.algo or self.cfg.strategy))
+        self._strategy = (strategy_mod.get(sel) if isinstance(sel, str)
+                          else sel)
+        self.algo = self._strategy.name
+        self._strategy.validate(self.cfg)
+        if self.store is None and self._strategy.name not in ("fedzo",
+                                                              "fedavg"):
+            raise ValueError(
+                f"strategy {self._strategy.name!r} needs the engine round "
+                f"step (its state/loss hooks live there) — construct the "
+                f"FedServer with a store=ClientStore")
         self._np_rng = np.random.default_rng(self.cfg.seed)
         self._momentum = None
         self._retries = 0
@@ -80,12 +97,13 @@ class FedServer:
         # raw fn in-scan (wrapping there would be a no-op)
         self._jit_eval = (jax.jit(self.jit_eval)
                           if self.jit_eval is not None else None)
-        if self.algo == "fedzo" and self.cfg.server_momentum > 0:
+        if self._strategy.has_momentum(self.cfg):
             # momentum state lives on the server and threads through
             # every round (round_simulated returns the updated state)
             self._momentum = tree_zeros_like(self.params)
         self._fstate = (self.faults.init_state(n)
                         if self.faults is not None else None)
+        self._zstate = self._strategy.init_state(self.params, self.cfg, n)
         if self.store is not None:
             from repro.sim import engine as sim_engine
             self._key = sim_engine.experiment_key(self.cfg)
@@ -101,7 +119,8 @@ class FedServer:
         if self.store is not None:
             from repro.sim import engine as sim_engine
             self._sim_step = jax.jit(sim_engine.make_round_step(
-                self.loss_fn, self.cfg, algo=self.algo, faults=self.faults))
+                self.loss_fn, self.cfg, strategy=self._strategy,
+                faults=self.faults))
             return
         # ``w`` is the size-weight vector (None unless cfg.weight_by_size —
         # None is an empty pytree, so the unweighted jit signature is
@@ -142,9 +161,10 @@ class FedServer:
         the fetched metrics dict."""
         if self.store is not None:
             state, metrics = self._sim_step(
-                (self.params, self._momentum, self._key, self._fstate),
-                self.store)
-            self.params, self._momentum, self._key, self._fstate = state
+                (self.params, self._momentum, self._key, self._fstate,
+                 self._zstate), self.store)
+            (self.params, self._momentum, self._key, self._fstate,
+             self._zstate) = state
         else:
             chosen = self.sample_clients()
             batches = self._stack_batches(chosen)
@@ -189,7 +209,8 @@ class FedServer:
         if t is None:
             t = self._round_idx
         while True:
-            snap = (self.params, self._momentum, self._key, self._fstate)
+            snap = (self.params, self._momentum, self._key, self._fstate,
+                    self._zstate)
             metrics = self._step_once()
             metrics["round"] = t
             ev = self.eval_fn or (
@@ -200,7 +221,8 @@ class FedServer:
                 metrics.update(ev(self.params))
             if not self.divergence_guard or not self._diverged(metrics):
                 break
-            self.params, self._momentum, self._key, self._fstate = snap
+            (self.params, self._momentum, self._key, self._fstate,
+             self._zstate) = snap
             self._retries += 1
             if self._retries > self.max_retries:
                 raise DivergenceError(t, self.max_retries, self.cfg.lr)
@@ -245,19 +267,20 @@ class FedServer:
             # eval_fn, user code may hold references) — power users get
             # in-place donation through sim.run_experiment directly
             fn = sim_engine.make_experiment_fn(
-                self.loss_fn, self.cfg, rounds, algo=self.algo,
+                self.loss_fn, self.cfg, rounds, strategy=self._strategy,
                 eval_fn=self.jit_eval, eval_every=self.eval_every,
                 faults=self.faults, donate=False)
             self._exp_cache[rounds] = fn
-        (self.params, self._momentum, self._key, self._fstate, ring,
-         ebuf) = fn(self.params, self._momentum, self._key, self._fstate,
-                    self.store)
+        (self.params, self._momentum, self._key, self._fstate, self._zstate,
+         ring, ebuf) = fn(self.params, self._momentum, self._key,
+                          self._fstate, self._zstate, self.store)
         res = sim_engine.ExperimentResult(
             params=self.params, momentum=self._momentum, key=self._key,
             metrics=ring, evals=ebuf, rounds=rounds, ring_size=rounds,
             eval_rounds=(np.arange(0, rounds, self.eval_every)
                          if self.jit_eval is not None else np.arange(0)),
-            fault_state=self._fstate)
+            fault_state=self._fstate, strategy=self._strategy.name,
+            strategy_state=self._zstate)
         if self.divergence_guard and self._diverged(
                 {k: float(v[-1]) for k, v in
                  jax.device_get(res.metrics).items()}):

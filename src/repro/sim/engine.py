@@ -3,11 +3,11 @@
 One compiled program runs an ENTIRE experiment: ``lax.scan`` over R
 communication rounds, each round drawing its participants and minibatches
 from the device-resident ``ClientStore`` (sim/store.py), running the
-existing simulated round (``fedzo.round_simulated`` /
-``fedavg.round_simulated`` — momentum and channel scheduling threaded
-through the carry), and writing its scalar metrics into a fixed-shape ring
-buffer. Evaluation runs in-scan every k rounds behind a ``lax.cond``. The
-host syncs exactly once, after all R rounds.
+round of the resolved ``AlgoStrategy`` (core/strategy.py — FedZO, FedAvg,
+ZO-FedProx, ZO-FedDyn, ZO-SCAFFOLD; momentum, strategy state, and channel
+scheduling threaded through the carry), and writing its scalar metrics
+into a fixed-shape ring buffer. Evaluation runs in-scan every k rounds
+behind a ``lax.cond``. The host syncs exactly once, after all R rounds.
 
 Key-chain protocol (shared with ``FedServer.run_round`` on the store path,
 so R in-jit rounds bit-match R host-driven rounds):
@@ -21,19 +21,22 @@ cfg.prng_impl)`` so a whole experiment is bit-reproducible from the config.
 With a ``FaultModel`` attached the split widens to 6 and the extra
 ``k_fault`` stream drives the availability/straggler/corruption draws —
 fault-free runs keep the exact 5-way chain, so existing trajectories (and
-the golden fixtures) are untouched.
+the golden fixtures) are untouched. Strategies draw nothing of their own:
+their state updates are deterministic functions of the round, so switching
+strategy never perturbs the chain.
 
-Donation: the jitted program donates params, momentum, and the key, so at
-steady state the engine updates the model in place — no per-round
-host↔device traffic and no double-buffered parameter copies.
+Donation: the jitted program donates params, momentum, key, and strategy
+state, so at steady state the engine updates the model in place — no
+per-round host↔device traffic and no double-buffered parameter copies.
 
 Durability (DESIGN.md §12): ``run_experiment(..., checkpoint_every=k,
 checkpoint_dir=...)`` runs the same scan in k-round segments, paying ONE
 host sync + one atomic snapshot of the full carry (params, momentum, key,
-fault state, metrics ring, eval buffer, round index) per segment. A run
-killed between segments resumes bit-exactly (``resume=True``), and the
-per-segment sync doubles as the divergence guard: a non-finite carry rolls
-back to the last good snapshot with lr backoff, bounded by ``max_retries``.
+fault state, strategy state, metrics ring, eval buffer, round index) per
+segment. A run killed between segments resumes bit-exactly
+(``resume=True``), and the per-segment sync doubles as the divergence
+guard: a non-finite carry rolls back to the last good snapshot with lr
+backoff, bounded by ``max_retries``.
 """
 from __future__ import annotations
 
@@ -46,7 +49,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedZOConfig
-from repro.core import aircomp, fedavg, fedzo
+from repro.core import aircomp
+from repro.core import strategy as strategy_mod
+from repro.core.strategy import _static_positive  # noqa: F401  (re-export)
 from repro.sim.faults import DivergenceError, FaultModel
 from repro.sim.store import ClientStore, sample_batches, sample_participants
 from repro.utils.tree import tree_zeros_like
@@ -64,28 +69,41 @@ def experiment_key(cfg: FedZOConfig):
     return jax.random.key(cfg.seed, impl=cfg.prng_impl)
 
 
-def make_round_step(loss_fn, cfg: FedZOConfig, *, algo: str = "fedzo",
-                    round_fn=None, faults: Optional[FaultModel] = None
-                    ) -> Callable:
+def _resolve(strategy, algo, cfg) -> strategy_mod.AlgoStrategy:
+    return strategy_mod.resolve(strategy, algo, cfg)
+
+
+def make_round_step(loss_fn, cfg: FedZOConfig, *, algo: Optional[str] = None,
+                    strategy=None, round_fn=None,
+                    faults: Optional[FaultModel] = None) -> Callable:
     """One full communication round as a pure function
-    ``step((params, momentum, key, fstate), store) ->
-    ((params', momentum', key', fstate'), metrics)``.
+    ``step((params, momentum, key, fstate, zstate), store) ->
+    ((params', momentum', key', fstate', zstate'), metrics)``.
 
     THE round unit shared by the scan engine and by
     ``FedServer.run_round`` on the store path — sharing it is what makes
     the two trajectories bit-identical (under faults too: the fault draws
-    hang off the same carried key chain). ``round_fn`` optionally replaces
-    ``fedzo.round_simulated`` with a signature-compatible deployment (the
-    clients-axis shard_map round of sim/shard.py). ``fstate`` is the fault
-    carry (the [N] Gilbert–Elliott availability states); None without a
-    ``faults`` model.
+    hang off the same carried key chain). The algorithm comes from the
+    strategy registry (``strategy=`` a name or ``AlgoStrategy``; the
+    ``algo=`` string is a deprecated alias; default ``cfg.strategy``).
+    ``round_fn`` optionally replaces ``fedzo.round_simulated`` with a
+    signature-compatible deployment (the clients-axis shard_map round of
+    sim/shard.py) — only for strategies without hooks. ``fstate`` is the
+    fault carry (the [N] Gilbert–Elliott availability states), ``zstate``
+    the strategy carry ({"client": [N, ...], "server": ...} pytree for the
+    stateful strategies); both None when unused.
     """
-    has_momentum = algo == "fedzo" and _static_positive(cfg.server_momentum)
-    fz_round = round_fn if round_fn is not None else fedzo.round_simulated
+    strat = _resolve(strategy, algo, cfg)
+    strat.validate(cfg)
+    if round_fn is not None and not strat.supports_round_fn:
+        raise ValueError(
+            f"strategy {strat.name!r} wraps the local phase with loss/state "
+            f"hooks that a custom round_fn (the sharded round) cannot carry "
+            f"— run it through the default fedzo round")
     weigh = cfg.weight_by_size
 
     def step(state, store: ClientStore):
-        params, momentum, key, fstate = state
+        params, momentum, key, fstate, zstate = state
         if faults is not None:
             key, k_part, k_batch, k_zo, k_chan, k_fault = \
                 jax.random.split(key, 6)
@@ -104,32 +122,13 @@ def make_round_step(loss_fn, cfg: FedZOConfig, *, algo: str = "fedzo",
         if faults is not None:
             fstate, inj = faults.step(k_fault, fstate, idx)
             wkw["faults"] = inj
-        if algo == "fedavg":
-            params, metrics = fedavg.round_simulated(
-                loss_fn, params, batches, cfg, channel_rng=k_chan, **wkw)
-        else:
-            rngs = jax.random.split(k_zo, cfg.n_participating)
-            if has_momentum:
-                params, metrics, momentum = fz_round(
-                    loss_fn, params, batches, rngs, cfg, channel_rng=k_chan,
-                    momentum=momentum, **wkw)
-            else:
-                params, metrics = fz_round(
-                    loss_fn, params, batches, rngs, cfg, channel_rng=k_chan,
-                    **wkw)
-        return (params, momentum, key, fstate), metrics
+        params, metrics, momentum, zstate = strat.run_round(
+            loss_fn, params, batches, k_zo, cfg, channel_rng=k_chan,
+            momentum=momentum, zstate=zstate, idx=idx, round_fn=round_fn,
+            **wkw)
+        return (params, momentum, key, fstate, zstate), metrics
 
     return step
-
-
-def _static_positive(x) -> bool:
-    """cfg fields compared against 0 at trace time must be static — a
-    sweep-vmapped (traced) value here would silently change the program
-    structure, so reject it loudly."""
-    if isinstance(x, jax.core.Tracer):
-        raise ValueError("server_momentum selects the carry structure and "
-                         "cannot be swept/vmapped — keep it static")
-    return x > 0
 
 
 @dataclass
@@ -139,7 +138,9 @@ class ExperimentResult:
     ``evals`` the in-scan eval outputs (dict of [n_evals] arrays), one slot
     per eval round in ``eval_rounds``. ``fault_state`` carries the final
     [N] availability states when a ``FaultModel`` was attached; ``events``
-    holds structured host-side rows (divergence rollbacks)."""
+    holds structured host-side rows (divergence rollbacks); ``strategy``
+    the algorithm name and ``strategy_state`` its final carry (the stacked
+    per-client controls/duals + server control for scaffold/feddyn)."""
     params: Any
     momentum: Any
     key: Any
@@ -150,22 +151,29 @@ class ExperimentResult:
     eval_rounds: np.ndarray
     fault_state: Any = None
     events: list = field(default_factory=list)
+    strategy: str = "fedzo"
+    strategy_state: Any = None
 
     def recorded_rounds(self) -> np.ndarray:
         """Round numbers still present in the ring, oldest→newest."""
         start = max(0, self.rounds - self.ring_size)
         return np.arange(start, self.rounds)
 
+    def history(self, *, start_round: int = 0) -> list:
+        """Per-round history rows (see the module-level ``history``)."""
+        return history(self, start_round=start_round)
 
-def _zero_buffers(loss_fn, params, store, cfg, momentum, key, fstate, *,
-                  algo, round_fn, faults, eval_fn, ring_alloc, n_evals):
+
+def _zero_buffers(loss_fn, params, store, cfg, momentum, key, fstate, zstate,
+                  *, strategy, round_fn, faults, eval_fn, ring_alloc,
+                  n_evals):
     """Zero-initialized metrics ring + eval buffer with the dtypes the
     round step / eval_fn will write — via ``jax.eval_shape``, so nothing
     is executed. Shared by the single-shot scan and the segment runner (the
     buffers must be identical for chunked ≡ single-shot bit-equality)."""
-    step = make_round_step(loss_fn, cfg, algo=algo, round_fn=round_fn,
-                           faults=faults)
-    state0 = (params, momentum, key, fstate)
+    step = make_round_step(loss_fn, cfg, strategy=strategy,
+                           round_fn=round_fn, faults=faults)
+    state0 = (params, momentum, key, fstate, zstate)
     m_shapes = jax.eval_shape(lambda s: step(s, store)[1], state0)
     ring0 = {k: jnp.zeros((ring_alloc,), v.dtype)
              for k, v in m_shapes.items()}
@@ -179,15 +187,17 @@ def _zero_buffers(loss_fn, params, store, cfg, momentum, key, fstate, *,
 
 
 def experiment_core(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
-                    rounds: int, key, momentum=None, *, algo: str = "fedzo",
+                    rounds: int, key, momentum=None, *,
+                    algo: Optional[str] = None, strategy=None, zstate=None,
                     eval_fn=None, eval_every: int = 0, ring_size: int = 0,
                     round_fn=None, faults: Optional[FaultModel] = None,
                     fault_state=None, t0=0, total_rounds: int = 0,
                     ring=None, ebuf=None):
     """The traceable experiment body: scan ``rounds`` round steps, ring-
     buffer the metrics, eval in-scan every ``eval_every`` rounds. Returns
-    (params, momentum, key, fault_state, metrics_ring, evals). Un-jitted so
-    sweeps can vmap it over a stacked config axis (sim/sweep.py).
+    (params, momentum, key, fault_state, zstate, metrics_ring, evals).
+    Un-jitted so sweeps can vmap it over a stacked config axis
+    (sim/sweep.py).
 
     Segment mode (the checkpointed runner): ``t0``/``total_rounds`` place
     this scan as rounds [t0, t0+rounds) of a ``total_rounds``-round
@@ -195,19 +205,20 @@ def experiment_core(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
     TOTAL, and partially-filled buffers are threaded back in via
     ``ring``/``ebuf``, so k-round segments write exactly the cells the
     uninterrupted scan would."""
+    strat = _resolve(strategy, algo, cfg)
     total = total_rounds or rounds
     ring_alloc = min(total, ring_size) if ring_size else total
-    step = make_round_step(loss_fn, cfg, algo=algo, round_fn=round_fn,
+    step = make_round_step(loss_fn, cfg, strategy=strat, round_fn=round_fn,
                            faults=faults)
     do_eval = eval_fn is not None and eval_every > 0
     n_evals = (total + eval_every - 1) // eval_every if do_eval else 0
 
-    state0 = (params, momentum, key, fault_state)
+    state0 = (params, momentum, key, fault_state, zstate)
     if ring is None or (do_eval and ebuf is None):
         ring0, ebuf0 = _zero_buffers(
-            loss_fn, params, store, cfg, momentum, key, fault_state,
-            algo=algo, round_fn=round_fn, faults=faults, eval_fn=eval_fn,
-            ring_alloc=ring_alloc, n_evals=n_evals)
+            loss_fn, params, store, cfg, momentum, key, fault_state, zstate,
+            strategy=strat, round_fn=round_fn, faults=faults,
+            eval_fn=eval_fn, ring_alloc=ring_alloc, n_evals=n_evals)
         ring = ring0 if ring is None else ring
         ebuf = ebuf0 if ebuf is None else ebuf
     elif ebuf is None:
@@ -234,39 +245,50 @@ def experiment_core(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
     if not (isinstance(t0, int) and t0 == 0):
         ts = ts + t0
     (state, ring, ebuf), _ = jax.lax.scan(body, (state0, ring, ebuf), ts)
-    params, momentum, key, fault_state = state
-    return params, momentum, key, fault_state, ring, ebuf
+    params, momentum, key, fault_state, zstate = state
+    return params, momentum, key, fault_state, zstate, ring, ebuf
 
 
 def make_experiment_fn(loss_fn, cfg: FedZOConfig, rounds: int, *,
-                       algo: str = "fedzo", eval_fn=None, eval_every: int = 0,
+                       algo: Optional[str] = None, strategy=None,
+                       eval_fn=None, eval_every: int = 0,
                        ring_size: int = 0, round_fn=None, faults=None,
                        donate: bool = True) -> Callable:
     """Compile the whole experiment once: returns a jitted
-    ``fn(params, momentum, key, fstate, store) -> (params', momentum',
-    key', fstate', metrics_ring, evals)`` with the carry donated (pass
-    ``momentum=None`` when cfg.server_momentum is 0 and ``fstate=None``
-    without a fault model)."""
-    def fn(params, momentum, key, fstate, store):
-        return experiment_core(loss_fn, params, store, cfg, rounds, key,
-                               momentum, algo=algo, eval_fn=eval_fn,
-                               eval_every=eval_every, ring_size=ring_size,
-                               round_fn=round_fn, faults=faults,
-                               fault_state=fstate)
+    ``fn(params, momentum, key, fstate, zstate, store) -> (params',
+    momentum', key', fstate', zstate', metrics_ring, evals)`` with the
+    carry donated (pass ``momentum=None`` when cfg.server_momentum is 0,
+    ``fstate=None`` without a fault model, and ``zstate=None`` for the
+    stateless strategies)."""
+    strat = _resolve(strategy, algo, cfg)
 
-    return jax.jit(fn, donate_argnums=(0, 1, 2, 3) if donate else ())
+    def fn(params, momentum, key, fstate, zstate, store):
+        return experiment_core(loss_fn, params, store, cfg, rounds, key,
+                               momentum, strategy=strat, zstate=zstate,
+                               eval_fn=eval_fn, eval_every=eval_every,
+                               ring_size=ring_size, round_fn=round_fn,
+                               faults=faults, fault_state=fstate)
+
+    return jax.jit(fn, donate_argnums=(0, 1, 2, 3, 4) if donate else ())
 
 
 def run_experiment(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
-                   rounds: int, *, algo: str = "fedzo", eval_fn=None,
-                   eval_every: int = 0, ring_size: int = 0, key=None,
-                   momentum=None, round_fn=None, faults=None,
+                   rounds: int, *, algo: Optional[str] = None, strategy=None,
+                   eval_fn=None, eval_every: int = 0, ring_size: int = 0,
+                   key=None, momentum=None, round_fn=None, faults=None,
                    donate: bool = True, checkpoint_every: int = 0,
                    checkpoint_dir=None, resume: bool = False,
                    max_segments=None, segment_callback=None,
                    max_retries: int = 3,
                    lr_backoff: float = 0.5) -> ExperimentResult:
     """Run a whole experiment inside ONE compiled program.
+
+    The algorithm comes from the strategy registry: ``strategy=`` (a name
+    or ``AlgoStrategy`` instance) wins, the ``algo=`` string is a
+    deprecated alias, and the default is ``cfg.strategy`` — so swapping
+    the algorithm is one config field. Stateful strategies (feddyn,
+    scaffold) get their per-client state initialized here and returned as
+    ``result.strategy_state``.
 
     ``eval_fn(params) -> dict of scalars`` must be jit-traceable; it runs
     in-scan every ``eval_every`` rounds. ``ring_size`` bounds the metrics
@@ -285,41 +307,49 @@ def run_experiment(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
     this call (for tests/preemption drills); ``segment_callback(round,
     total)`` fires after every successful snapshot.
     """
+    strat = _resolve(strategy, algo, cfg)
     if key is None:
         key = experiment_key(cfg)
-    if momentum is None and algo == "fedzo" and cfg.server_momentum > 0:
+    if momentum is None and strat.has_momentum(cfg):
         momentum = tree_zeros_like(params)
     fstate = faults.init_state(store.n_clients) if faults is not None else None
+    zstate = strat.init_state(params, cfg, store.n_clients)
     do_eval = eval_fn is not None and eval_every > 0
     if checkpoint_every > 0:
         return _run_checkpointed(
-            loss_fn, params, store, cfg, rounds, algo=algo, eval_fn=eval_fn,
-            eval_every=eval_every, ring_size=ring_size, key=key,
-            momentum=momentum, round_fn=round_fn, faults=faults,
-            fstate=fstate, donate=donate, checkpoint_every=checkpoint_every,
+            loss_fn, params, store, cfg, rounds, strategy=strat,
+            eval_fn=eval_fn, eval_every=eval_every, ring_size=ring_size,
+            key=key, momentum=momentum, round_fn=round_fn, faults=faults,
+            fstate=fstate, zstate=zstate, donate=donate,
+            checkpoint_every=checkpoint_every,
             checkpoint_dir=checkpoint_dir, resume=resume,
             max_segments=max_segments, segment_callback=segment_callback,
             max_retries=max_retries, lr_backoff=lr_backoff)
-    fn = make_experiment_fn(loss_fn, cfg, rounds, algo=algo, eval_fn=eval_fn,
-                            eval_every=eval_every, ring_size=ring_size,
-                            round_fn=round_fn, faults=faults, donate=donate)
-    params, momentum, key, fstate, ring, ebuf = fn(params, momentum, key,
-                                                   fstate, store)
+    fn = make_experiment_fn(loss_fn, cfg, rounds, strategy=strat,
+                            eval_fn=eval_fn, eval_every=eval_every,
+                            ring_size=ring_size, round_fn=round_fn,
+                            faults=faults, donate=donate)
+    params, momentum, key, fstate, zstate, ring, ebuf = fn(
+        params, momentum, key, fstate, zstate, store)
     eval_rounds = np.arange(0, rounds, eval_every) if do_eval \
         else np.arange(0)
     return ExperimentResult(params=params, momentum=momentum, key=key,
                             metrics=ring, evals=ebuf, rounds=rounds,
                             ring_size=min(rounds, ring_size) or rounds,
-                            eval_rounds=eval_rounds, fault_state=fstate)
+                            eval_rounds=eval_rounds, fault_state=fstate,
+                            strategy=strat.name, strategy_state=zstate)
 
 
-def _carry_to_state(params, momentum, key, fstate, ring, ebuf) -> dict:
+def _carry_to_state(params, momentum, key, fstate, zstate, ring,
+                    ebuf) -> dict:
     """The durable form of the full experiment carry: one pytree whose
     leaves are all plain arrays (the typed PRNG key is exported via
-    ``jax.random.key_data``; ``wrap_key_data`` re-types it on restore)."""
+    ``jax.random.key_data``; ``wrap_key_data`` re-types it on restore).
+    A ``None`` zstate contributes no leaves, so snapshots of stateless
+    strategies keep the pre-strategy npz layout."""
     return {"params": params, "momentum": momentum,
             "key": jax.random.key_data(key), "fstate": fstate,
-            "ring": ring, "ebuf": ebuf}
+            "zstate": zstate, "ring": ring, "ebuf": ebuf}
 
 
 def _state_to_carry(state: dict, cfg: FedZOConfig):
@@ -328,8 +358,9 @@ def _state_to_carry(state: dict, cfg: FedZOConfig):
     key = jax.random.wrap_key_data(jnp.asarray(state["key"]),
                                    impl=cfg.prng_impl)
     dev = [jax.tree.map(jnp.asarray, state[k])
-           for k in ("params", "momentum", "fstate", "ring", "ebuf")]
-    return (dev[0], dev[1], key, dev[2], dev[3], dev[4])
+           for k in ("params", "momentum", "fstate", "zstate", "ring",
+                     "ebuf")]
+    return (dev[0], dev[1], key, dev[2], dev[3], dev[4], dev[5])
 
 
 def _finite_state(state: dict, rounds_done, ring_alloc, eval_every,
@@ -356,17 +387,20 @@ def _finite_state(state: dict, rounds_done, ring_alloc, eval_every,
     return True
 
 
-def _run_checkpointed(loss_fn, params, store, cfg, rounds, *, algo, eval_fn,
-                      eval_every, ring_size, key, momentum, round_fn, faults,
-                      fstate, donate, checkpoint_every, checkpoint_dir,
-                      resume, max_segments, segment_callback, max_retries,
+def _run_checkpointed(loss_fn, params, store, cfg, rounds, *, strategy,
+                      eval_fn, eval_every, ring_size, key, momentum,
+                      round_fn, faults, fstate, zstate, donate,
+                      checkpoint_every, checkpoint_dir, resume,
+                      max_segments, segment_callback, max_retries,
                       lr_backoff) -> ExperimentResult:
     """The durable segment loop behind ``run_experiment(...,
     checkpoint_every=k)``. Invariants:
 
     - **Bit-equality**: segments scan global round indices into buffers
       sized against the total, so the chunked run writes exactly the cells
-      (and walks exactly the key chain) of the single-shot scan.
+      (and walks exactly the key chain) of the single-shot scan. The
+      strategy carry rides the same snapshot, so a resumed scaffold/feddyn
+      run restores every client's control/dual bit-identically.
     - **Durability**: the full carry is snapshotted atomically after every
       segment (``checkpoint.save_run_state``: tmp dir + rename + LATEST
       pointer swap), so a SIGKILL at ANY point leaves a consistent latest
@@ -380,6 +414,7 @@ def _run_checkpointed(loss_fn, params, store, cfg, rounds, *, algo, eval_fn,
     """
     from repro.checkpoint import checkpoint as ckpt
 
+    strat = _resolve(strategy, None, cfg)
     if checkpoint_dir is None:
         raise ValueError("checkpoint_every > 0 requires checkpoint_dir")
     do_eval = eval_fn is not None and eval_every > 0
@@ -388,15 +423,16 @@ def _run_checkpointed(loss_fn, params, store, cfg, rounds, *, algo, eval_fn,
     orig_hash = ckpt.config_hash(cfg)
 
     ring, ebuf = _zero_buffers(
-        loss_fn, params, store, cfg, momentum, key, fstate, algo=algo,
-        round_fn=round_fn, faults=faults, eval_fn=eval_fn,
+        loss_fn, params, store, cfg, momentum, key, fstate, zstate,
+        strategy=strat, round_fn=round_fn, faults=faults, eval_fn=eval_fn,
         ring_alloc=ring_alloc, n_evals=n_evals)
 
     t, events, cur_lr = 0, [], cfg.lr
     if resume:
         snap = ckpt.latest_run_state(checkpoint_dir)
         if snap is not None:
-            like = _carry_to_state(params, momentum, key, fstate, ring, ebuf)
+            like = _carry_to_state(params, momentum, key, fstate, zstate,
+                                   ring, ebuf)
             state, meta = ckpt.restore_run_state(snap, like)
             if meta.get("config_hash") not in (None, orig_hash):
                 import warnings
@@ -407,18 +443,20 @@ def _run_checkpointed(loss_fn, params, store, cfg, rounds, *, algo, eval_fn,
             t = int(meta["round"])
             events = list(meta.get("events", []))
             cur_lr = float(meta.get("lr", cfg.lr))
-            params, momentum, key, fstate, ring, ebuf = \
+            params, momentum, key, fstate, zstate, ring, ebuf = \
                 _state_to_carry(state, cfg)
 
     def checkpoint_meta():
-        return {"round": t, "rounds_total": rounds, "algo": algo,
-                "config_hash": orig_hash, "lr": cur_lr, "events": events}
+        return {"round": t, "rounds_total": rounds, "algo": strat.name,
+                "strategy": strat.name, "config_hash": orig_hash,
+                "lr": cur_lr, "events": events}
 
     if t == 0:
         # round-0 snapshot: the rollback anchor for a first-segment
         # divergence (the donated pre-segment carry is gone by then)
         state0 = jax.device_get(
-            _carry_to_state(params, momentum, key, fstate, ring, ebuf))
+            _carry_to_state(params, momentum, key, fstate, zstate, ring,
+                            ebuf))
         ckpt.save_run_state(checkpoint_dir, state0, round_idx=0,
                             meta=checkpoint_meta())
 
@@ -429,23 +467,24 @@ def _run_checkpointed(loss_fn, params, store, cfg, rounds, *, algo, eval_fn,
             run_cfg = (cfg if cur_lr == cfg.lr
                        else dataclasses.replace(cfg, lr=cur_lr))
 
-            def fn(params, momentum, key, fstate, ring, ebuf, t0, store):
+            def fn(params, momentum, key, fstate, zstate, ring, ebuf, t0,
+                   store):
                 return experiment_core(
                     loss_fn, params, store, run_cfg, chunk, key, momentum,
-                    algo=algo, eval_fn=eval_fn, eval_every=eval_every,
-                    ring_size=ring_size, round_fn=round_fn, faults=faults,
-                    fault_state=fstate, t0=t0, total_rounds=rounds,
-                    ring=ring, ebuf=ebuf)
+                    strategy=strat, zstate=zstate, eval_fn=eval_fn,
+                    eval_every=eval_every, ring_size=ring_size,
+                    round_fn=round_fn, faults=faults, fault_state=fstate,
+                    t0=t0, total_rounds=rounds, ring=ring, ebuf=ebuf)
 
             seg_fns[chunk] = jax.jit(
-                fn, donate_argnums=(0, 1, 2, 3, 4, 5) if donate else ())
+                fn, donate_argnums=(0, 1, 2, 3, 4, 5, 6) if donate else ())
         return seg_fns[chunk]
 
     retries, segments_done = 0, 0
     while t < rounds:
         chunk = min(checkpoint_every, rounds - t)
-        out = segment_fn(chunk)(params, momentum, key, fstate, ring, ebuf,
-                                jnp.int32(t), store)
+        out = segment_fn(chunk)(params, momentum, key, fstate, zstate, ring,
+                                ebuf, jnp.int32(t), store)
         # ONE host sync per segment: fetch the full carry, then everything
         # below (divergence check + atomic save) is host-side numpy
         state = jax.device_get(_carry_to_state(*out))
@@ -461,11 +500,11 @@ def _run_checkpointed(loss_fn, params, store, cfg, rounds, *, algo, eval_fn,
             seg_fns.clear()  # the backed-off lr is baked into the program
             snap = ckpt.latest_run_state(checkpoint_dir)
             good, _ = ckpt.restore_run_state(snap, state)
-            params, momentum, key, fstate, ring, ebuf = \
+            params, momentum, key, fstate, zstate, ring, ebuf = \
                 _state_to_carry(good, cfg)
             continue
         retries = 0
-        params, momentum, key, fstate, ring, ebuf = out
+        params, momentum, key, fstate, zstate, ring, ebuf = out
         t = t_next
         ckpt.save_run_state(checkpoint_dir, state, round_idx=t,
                             meta=checkpoint_meta())
@@ -479,12 +518,15 @@ def _run_checkpointed(loss_fn, params, store, cfg, rounds, *, algo, eval_fn,
     return ExperimentResult(params=params, momentum=momentum, key=key,
                             metrics=ring, evals=ebuf, rounds=t,
                             ring_size=ring_alloc, eval_rounds=eval_rounds,
-                            fault_state=fstate, events=list(events))
+                            fault_state=fstate, events=list(events),
+                            strategy=strat.name, strategy_state=zstate)
 
 
 def history(result: ExperimentResult, *, start_round: int = 0) -> list:
     """FedServer-style per-round history from an engine result: ONE host
     sync for everything (metrics ring + evals), then plain python floats.
+    Every row carries the run's ``strategy`` name so multi-algorithm
+    sweeps/comparisons stay distinguishable once rows are pooled.
 
     Eval rounds evicted from the metrics ring (a long run with a small
     ``ring_size``) still surface as eval-only rows — the in-scan evals live
@@ -498,9 +540,10 @@ def history(result: ExperimentResult, *, start_round: int = 0) -> list:
     out = []
     for t in sorted(ev_by_round):
         if t < ring_start:                  # evicted from the ring: eval-only
-            out.append({"round": start_round + t, **ev_by_round[t]})
+            out.append({"round": start_round + t,
+                        "strategy": result.strategy, **ev_by_round[t]})
     for t in result.recorded_rounds():
-        row = {"round": start_round + int(t)}
+        row = {"round": start_round + int(t), "strategy": result.strategy}
         slot = int(t) % result.ring_size
         row.update({k: float(v[slot]) for k, v in mets.items()})
         row.update(ev_by_round.get(int(t), {}))

@@ -25,10 +25,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedZOConfig
+from repro.core import strategy as strategy_mod
 from repro.sim import engine
 from repro.sim.store import ClientStore
 
 # fields that vmap over the stacked config axis (everything else is static)
+# (strategy selectors — cfg.strategy, prox_mu, dyn_alpha — are deliberately
+# static: they change the traced round program, so they group/compile)
 DYNAMIC_FIELDS = ("snr_db", "lr", "mu", "h_min")
 
 
@@ -51,15 +54,23 @@ def _split(scenario: dict):
 
 
 def run_sweep(loss_fn, params, store: ClientStore, base_cfg: FedZOConfig,
-              scenarios: Sequence[dict], rounds: int, *, algo: str = "fedzo",
-              eval_fn=None, eval_every: int = 0, ring_size: int = 0,
+              scenarios: Sequence[dict], rounds: int, *,
+              algo: Optional[str] = None, strategy=None, eval_fn=None,
+              eval_every: int = 0, ring_size: int = 0,
               out_csv: Optional[str] = None) -> list:
     """Run every scenario (dicts of FedZOConfig overrides) for ``rounds``
     rounds; one jit per static-shape group, the dynamic axis vmapped.
 
+    The algorithm resolves per static group — an explicit ``strategy=``
+    (name or ``AlgoStrategy``; ``algo=`` is the deprecated string alias)
+    applies to every scenario, otherwise each group's ``cfg.strategy``
+    decides, so ``scenario_grid(strategy=("fedzo", "fedprox"))`` sweeps
+    the algorithm itself as a static axis.
+
     Returns one record per scenario:
-    ``{"scenario": dict, "metrics": {name: [ring] np.ndarray},
-    "evals": {name: [n_evals] np.ndarray}, "eval_rounds": np.ndarray}``.
+    ``{"scenario": dict, "strategy": name, "metrics": {name: [ring]
+    np.ndarray}, "evals": {name: [n_evals] np.ndarray},
+    "eval_rounds": np.ndarray}``.
     """
     groups: dict = {}
     for s in scenarios:
@@ -69,7 +80,8 @@ def run_sweep(loss_fn, params, store: ClientStore, base_cfg: FedZOConfig,
     records = []
     for static, members in groups.items():
         cfg = dataclasses.replace(base_cfg, **dict(static))
-        if algo == "fedzo" and cfg.server_momentum > 0:
+        strat = strategy_mod.resolve(strategy, algo, cfg)
+        if strat.has_momentum(cfg):
             raise ValueError("sweeps keep the carry momentum-free; run "
                              "momentum configs through run_experiment")
         dyn_stack = {f: jnp.asarray(
@@ -78,14 +90,17 @@ def run_sweep(loss_fn, params, store: ClientStore, base_cfg: FedZOConfig,
         seeds = jnp.asarray([m[1].get("seed", base_cfg.seed)
                              for m in members], jnp.uint32)
 
-        def one(dyn, seed, cfg=cfg):
+        def one(dyn, seed, cfg=cfg, strat=strat):
             c = dataclasses.replace(cfg, **dyn)
             key = jax.random.key(seed, impl=cfg.prng_impl)
-            return engine.experiment_core(
-                loss_fn, params, store, c, rounds, key, None, algo=algo,
-                eval_fn=eval_fn, eval_every=eval_every, ring_size=ring_size)
+            zstate = strat.init_state(params, c, store.n_clients)
+            out = engine.experiment_core(
+                loss_fn, params, store, c, rounds, key, None, strategy=strat,
+                zstate=zstate, eval_fn=eval_fn, eval_every=eval_every,
+                ring_size=ring_size)
+            return out[5], out[6]
 
-        _, _, _, _, ring, ebuf = jax.jit(jax.vmap(one))(dyn_stack, seeds)
+        ring, ebuf = jax.jit(jax.vmap(one))(dyn_stack, seeds)
         ring = jax.device_get(ring)
         ebuf = jax.device_get(ebuf)
         eval_rounds = (np.arange(0, rounds, eval_every)
@@ -94,6 +109,7 @@ def run_sweep(loss_fn, params, store: ClientStore, base_cfg: FedZOConfig,
         for g, (scenario, _) in enumerate(members):
             records.append({
                 "scenario": dict(scenario),
+                "strategy": strat.name,
                 "metrics": {k: np.asarray(v[g]) for k, v in ring.items()},
                 "evals": {k: np.asarray(v[g]) for k, v in ebuf.items()},
                 "eval_rounds": eval_rounds,
@@ -106,14 +122,17 @@ def run_sweep(loss_fn, params, store: ClientStore, base_cfg: FedZOConfig,
 
 def save_csv(records, path, *, rounds: int, ring_size: int = 0) -> None:
     """Long-format curve dump: scenario,round,metric,value — the raw
-    material for the paper's figure-style plots."""
+    material for the paper's figure-style plots. The scenario tag always
+    carries a ``strategy=`` entry, so rows from multi-algorithm sweeps
+    pooled into one results/ file stay distinguishable."""
     ring = min(rounds, ring_size) if ring_size else rounds
     start = rounds - ring
     with open(path, "w") as f:
         f.write("scenario,round,metric,value\n")
         for rec in records:
-            tag = ";".join(f"{k}={v}" for k, v in
-                           sorted(rec["scenario"].items()))
+            items = dict(rec["scenario"])
+            items.setdefault("strategy", rec.get("strategy", "fedzo"))
+            tag = ";".join(f"{k}={v}" for k, v in sorted(items.items()))
             for name, arr in rec["metrics"].items():
                 for t in range(start, rounds):
                     f.write(f"{tag},{t},{name},{float(arr[t % ring])}\n")

@@ -54,6 +54,16 @@ GOLDEN = {
     # the conv track on the pytree counter path
     "cnn_counter": dict(task=_CNN_TASK, cfg={**_BASE_CFG, "lr": 2e-2},
                         rounds=6),
+    # strategy layer (DESIGN.md §13): proximal loss wrap on the same task —
+    # pins that the wrapped local phase, not just plain FedZO, stays bit-stable
+    "softmax_fedprox": dict(task=_SOFTMAX_TASK,
+                            cfg={**_BASE_CFG, "strategy": "fedprox",
+                                 "prox_mu": 0.1}, rounds=8),
+    # stateful strategy: per-client control variates in the scan carry plus
+    # the post-phase delta correction and the server control update
+    "softmax_scaffold": dict(task=_SOFTMAX_TASK,
+                             cfg={**_BASE_CFG, "strategy": "scaffold"},
+                             rounds=8),
 }
 
 

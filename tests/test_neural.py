@@ -103,6 +103,42 @@ def test_host_bitmatches_engine(model, flat, weighted, sched):
         assert hm["mean_local_loss"] == sm["mean_local_loss"], (hm, sm)
 
 
+# strategy layer (core/strategy.py): every new algorithm must hold host ≡
+# engine bitwise across the aggregation paths, exactly like fedzo — same
+# round step, same key chain, plus the strategy state threading the carry
+STRATEGY_CASES = [("fedprox", {"prox_mu": 0.1}),
+                  ("feddyn", {"dyn_alpha": 0.1}),
+                  ("scaffold", {})]
+STRATEGY_PATHS = [
+    ("plain", {}),
+    ("flat", dict(flat_params=True, flat_block_rows=BR)),
+    ("wide", dict(batch_directions=True, direction_conv="block",
+                  prng_impl="unsafe_rbg")),
+    ("air_weighted", dict(aircomp=True, snr_db=10.0, channel_schedule=True,
+                          weight_by_size=True)),
+]
+
+
+@pytest.mark.parametrize("pname,pkw", STRATEGY_PATHS)
+@pytest.mark.parametrize("sname,skw", STRATEGY_CASES)
+def test_strategy_host_bitmatches_engine(sname, skw, pname, pkw):
+    """3 host-driven rounds == 3 in-scan rounds, bit for bit, for every
+    strategy × {pytree, flat, wide, AirComp+scheduled+weighted} path —
+    including the per-client strategy state at the end."""
+    task = _task("softmax")
+    cfg = _cfg(task, strategy=sname, **skw, **pkw)
+    p0 = neural.params_init(task, cfg.seed)
+    host = FedServer(task.loss, p0, task.clients, cfg, store=task.store)
+    for t in range(3):
+        host.run_round(t)
+    scanned = FedServer(task.loss, p0, task.clients, cfg, store=task.store)
+    scanned.run(3)
+    _assert_trees_bitequal(host.params, scanned.params)
+    _assert_trees_bitequal(host._zstate, scanned._zstate)
+    for hm, sm in zip(host.history, scanned.history):
+        assert hm["mean_local_loss"] == sm["mean_local_loss"], (hm, sm)
+
+
 def test_wide_engine_bitmatches_host():
     """The engine's fast execution plan (wide phases, rbg PRNG) also stays
     host ≡ engine on a neural conv task."""

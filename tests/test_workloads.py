@@ -149,7 +149,7 @@ def test_history_keeps_ring_evicted_eval_rounds():
     assert [h["round"] for h in h_ring] == [0, 2, 4, 5, 6, 7]
     for h in h_ring:
         if h["round"] < 5:                  # evicted: eval-only rows
-            assert set(h) == {"round", "probe"}
+            assert set(h) == {"round", "probe", "strategy"}
         else:
             assert "mean_local_loss" in h
         if "probe" in h:
