@@ -15,6 +15,9 @@ Rows:
   batched-direction gain (measured over fewer rounds; per-round metric).
 - ``sim/engine_speedup_x``         — host loop / fast engine (the ≥5×
   acceptance row).
+- ``sim/engine_tap_us_per_round`` / ``sim/tap_overhead_pct`` — the engine
+  with a worst-case in-scan telemetry tap (``tap_every=1`` into a
+  NullSink, one io_callback per round) vs taps-off (<10% acceptance).
 - ``sim/sharded_dev{n}_us_per_round`` — the clients-axis shard_map round
   inside the engine on a forced n-device host platform (subprocess), n ∈
   {1, 2}: the device-scaling story at laptop scale.
@@ -137,6 +140,23 @@ def run():
     rows.append(("sim/engine_loop_est_us_per_round",
                  (time.perf_counter() - t0) / r_loop * 1e6, r_loop))
 
+    # -- in-scan tap overhead (acceptance: <10% on µs/round) ------------------
+    # tap_every=1 (every round fires the io_callback) into a NullSink is
+    # the worst case; real cadences (tap_every=10+) amortize further
+    from repro import obs
+    tap = obs.RoundTap(obs.NullSink(), 1)
+    fnt = sim.make_experiment_fn(softmax_loss, fcfg, ROUNDS, donate=False,
+                                 tap=tap)
+    out = fnt(p0, None, key, None, None, store)       # compile
+    jax.block_until_ready(out[0])
+    t0 = time.perf_counter()
+    out = fnt(p0, None, key, None, None, store)
+    jax.block_until_ready(out[0])
+    tap_us = (time.perf_counter() - t0) / ROUNDS * 1e6
+    rows.append(("sim/engine_tap_us_per_round", tap_us, ROUNDS))
+    rows.append(("sim/tap_overhead_pct", 0.0,
+                 (tap_us / eng_us - 1.0) * 100.0))
+
     # -- fault-injection layer overhead (acceptance: <5% on rounds/s) ---------
     faults = sim.FaultModel(p_fail=0.05, p_recover=0.4, deadline=2.0,
                             p_corrupt=0.02)
@@ -179,11 +199,10 @@ ALGO_VARIANTS = (
 def run_algos():
     """Per-strategy engine cost: µs/round for each registered ZO strategy
     (+ the surrogate estimator) on the quickstart experiment under the fast
-    engine plan, plus its overhead vs plain FedZO in %. Also snapshots the
-    rows to ``results/BENCH_algos.json`` so the per-PR perf trajectory of
-    the strategy layer is tracked instead of re-measured ad hoc."""
+    engine plan, plus its overhead vs plain FedZO in %. (The harness —
+    benchmarks/run.py — snapshots these rows to ``results/BENCH_algos.json``
+    via ``obs.save_bench``, same as every other suite.)"""
     import dataclasses
-    import json
 
     from repro import sim
     from repro.models.simple import softmax_init, softmax_loss
@@ -213,10 +232,4 @@ def run_algos():
         else:
             rows.append((f"algos/{name}_overhead_vs_fedzo_pct", 0.0,
                          (us / base_us - 1.0) * 100.0))
-
-    os.makedirs("results", exist_ok=True)
-    with open(os.path.join("results", "BENCH_algos.json"), "w") as f:
-        json.dump({"rounds": rounds,
-                   "rows": [{"name": n, "us_per_call": u, "derived": d}
-                            for n, u, d in rows]}, f, indent=2)
     return rows

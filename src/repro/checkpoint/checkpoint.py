@@ -204,6 +204,22 @@ def latest_run_state(ckpt_dir):
     return None
 
 
+def read_sidecar(snapshot_path) -> dict:
+    """The raw JSON sidecar of a snapshot (save/save_run_state layouts
+    both) WITHOUT loading any arrays — provenance readers (the obs run
+    manifest cross-check, tooling that lists checkpoint dirs) use this to
+    get at ``config_hash``/``jax_version``/``round`` cheaply. A
+    ``config_hash`` recorded inside a dict-meta (the run-state layout) is
+    hoisted to the top level so both layouts read uniformly."""
+    with open(os.path.join(snapshot_path, "meta.json")) as f:
+        md = json.load(f)
+    meta = md.get("meta")
+    if isinstance(meta, dict) and "config_hash" not in md \
+            and "config_hash" in meta:
+        md["config_hash"] = meta["config_hash"]
+    return md
+
+
 def restore_run_state(snapshot_path, state_like):
     """Restore a full-carry snapshot into the structure of ``state_like``.
     Returns ``(state, meta dict)`` where meta is the flattened sidecar

@@ -88,6 +88,16 @@ def wire_bytes(msg) -> int:
                + jnp.asarray(msg["lr"]).nbytes)
 
 
+def wire_bytes_model(cfg: FedZOConfig) -> int:
+    """The STATIC per-client byte model of one wire message — the number
+    ``wire_bytes`` measures, derived from the config alone: the 8-byte
+    threefry key + H·b2 float32 coefficients + the 4-byte lr. The comms
+    ledger (obs/ledger.py) builds its seed-path uplink column from this;
+    tests pin it against an actual ``compress`` message so the two byte
+    accountings can never drift apart."""
+    return 8 + cfg.local_iters * cfg.b2 * 4 + 4
+
+
 def reconstruct_delta(msg, params_like, cfg: FedZOConfig):
     """Replay Δ = −η Σ_k Σ_n (c[k,n]/b2) v(key, k, n) on this host/shard.
 

@@ -18,6 +18,7 @@ Two drivers share the class:
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field, replace
 from typing import Callable, Optional
 
@@ -29,6 +30,7 @@ from repro.configs.base import FedZOConfig
 from repro.core import aircomp, fedavg, fedzo, seedcomm
 from repro.core import strategy as strategy_mod
 from repro.data.synthetic import sample_local_batches
+from repro.obs.ledger import CommsLedger
 from repro.sim.faults import DivergenceError, FaultModel
 from repro.utils.tree import tree_add, tree_bytes, tree_zeros_like
 
@@ -53,6 +55,7 @@ class FedServer:
     divergence_guard: bool = False       # roll back non-finite rounds
     max_retries: int = 3                 # lr-backoff retries before failing
     lr_backoff: float = 0.5              # lr multiplier per rollback
+    tracer: Optional[object] = None      # obs.Tracer: compile/execute spans
 
     def __post_init__(self):
         if self.clients is None and self.store is None:
@@ -104,6 +107,11 @@ class FedServer:
         self._fstate = (self.faults.init_state(n)
                         if self.faults is not None else None)
         self._zstate = self._strategy.init_state(self.params, self.cfg, n)
+        # one byte model per server: host rows and scanned rows get the
+        # SAME deterministic ledger columns, so the two drivers stay
+        # row-identical (the lr never enters the byte model, so rollback
+        # config swaps don't invalidate it)
+        self._ledger = CommsLedger.from_run(self.cfg, self.params)
         if self.store is not None:
             from repro.sim import engine as sim_engine
             self._key = sim_engine.experiment_key(self.cfg)
@@ -211,6 +219,7 @@ class FedServer:
         while True:
             snap = (self.params, self._momentum, self._key, self._fstate,
                     self._zstate)
+            t_start = time.perf_counter()
             metrics = self._step_once()
             metrics["round"] = t
             ev = self.eval_fn or (
@@ -218,8 +227,16 @@ class FedServer:
                     k: float(v)
                     for k, v in jax.device_get(self._jit_eval(p)).items()}))
             if ev:
-                metrics.update(ev(self.params))
+                if self.tracer is not None:
+                    with self.tracer.span("eval", round=t):
+                        metrics.update(ev(self.params))
+                else:
+                    metrics.update(ev(self.params))
             if not self.divergence_guard or not self._diverged(metrics):
+                # host wall-clock of the surviving attempt (dispatch +
+                # device sync + eval) — the scanned driver has no per-round
+                # host time by construction, so this column is host-only
+                metrics["round_ms"] = (time.perf_counter() - t_start) * 1e3
                 break
             (self.params, self._momentum, self._key, self._fstate,
              self._zstate) = snap
@@ -232,6 +249,7 @@ class FedServer:
                                  "retry": self._retries, "lr": self.cfg.lr})
         self._retries = 0
         self._round_idx = t + 1
+        self._ledger.annotate([metrics])
         self.history.append(metrics)
         return metrics
 
@@ -271,16 +289,26 @@ class FedServer:
                 eval_fn=self.jit_eval, eval_every=self.eval_every,
                 faults=self.faults, donate=False)
             self._exp_cache[rounds] = fn
+        args = (self.params, self._momentum, self._key, self._fstate,
+                self._zstate, self.store)
+        if self.tracer is not None:
+            from repro.checkpoint.checkpoint import config_hash
+            run = self.tracer.timed_compile(
+                ("fedserver", rounds, config_hash(self.cfg),
+                 self._strategy.name), fn, *args)
+            with self.tracer.span("execute", rounds=rounds):
+                out = jax.block_until_ready(run(*args))
+        else:
+            out = fn(*args)
         (self.params, self._momentum, self._key, self._fstate, self._zstate,
-         ring, ebuf) = fn(self.params, self._momentum, self._key,
-                          self._fstate, self._zstate, self.store)
+         ring, ebuf) = out
         res = sim_engine.ExperimentResult(
             params=self.params, momentum=self._momentum, key=self._key,
             metrics=ring, evals=ebuf, rounds=rounds, ring_size=rounds,
             eval_rounds=(np.arange(0, rounds, self.eval_every)
                          if self.jit_eval is not None else np.arange(0)),
             fault_state=self._fstate, strategy=self._strategy.name,
-            strategy_state=self._zstate)
+            strategy_state=self._zstate, ledger=self._ledger)
         if self.divergence_guard and self._diverged(
                 {k: float(v[-1]) for k, v in
                  jax.device_get(res.metrics).items()}):

@@ -1,0 +1,103 @@
+"""Persisted per-suite benchmark snapshots (ROADMAP item 4's trajectory).
+
+Every benchmark suite writes ``results/BENCH_<suite>.json`` through
+``save_bench``: the current rows plus a provenance block (jax version, git
+sha, UTC timestamp, optional config note). Re-saving a suite pushes the
+previous snapshot onto a bounded ``history`` list inside the same file, so
+the rounds/s trajectory ACCUMULATES per PR instead of being re-measured ad
+hoc and forgotten — ``results/make_tables.py --bench`` renders it.
+"""
+from __future__ import annotations
+
+import datetime
+import glob
+import json
+import os
+from typing import Optional
+
+import jax
+
+HISTORY_KEEP = 20
+
+
+def results_dir(path: Optional[str] = None) -> str:
+    """Default snapshot directory: the repo's ``results/`` (next to the
+    committed ``make_tables.py``), overridable for tests."""
+    if path:
+        return path
+    here = os.path.dirname(os.path.abspath(__file__))
+    repo = os.path.dirname(os.path.dirname(os.path.dirname(here)))
+    cand = os.path.join(repo, "results")
+    return cand if os.path.isdir(cand) else "results"
+
+
+def bench_path(suite: str, out_dir: Optional[str] = None) -> str:
+    return os.path.join(results_dir(out_dir), f"BENCH_{suite}.json")
+
+
+def _rows_json(rows) -> list:
+    """Normalize harness rows ((name, us, derived) tuples or dicts)."""
+    out = []
+    for r in rows:
+        if isinstance(r, dict):
+            out.append({"name": r["name"],
+                        "us_per_call": float(r.get("us_per_call", 0.0)),
+                        "derived": r.get("derived")})
+        else:
+            name, us, derived = r
+            out.append({"name": name, "us_per_call": float(us),
+                        "derived": derived})
+    return out
+
+
+def save_bench(suite: str, rows, *, config=None,
+               out_dir: Optional[str] = None) -> str:
+    """Snapshot one suite's rows to ``results/BENCH_<suite>.json``.
+
+    The previous snapshot (if any) is appended to the file's ``history``
+    (newest last, bounded to ``HISTORY_KEEP``), so successive runs build
+    the perf trajectory in place. Returns the path written."""
+    from repro.obs.manifest import git_sha
+
+    path = bench_path(suite, out_dir)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    history = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            history = list(prev.get("history", []))
+            history.append({k: prev.get(k) for k in
+                            ("timestamp", "jax_version", "git_sha", "rows")})
+            history = history[-HISTORY_KEEP:]
+        except (OSError, ValueError, KeyError):
+            history = []  # a corrupt snapshot never blocks a new one
+    snap = {"suite": suite,
+            "rows": _rows_json(rows),
+            "jax_version": jax.__version__,
+            "git_sha": git_sha(),
+            "timestamp": datetime.datetime.now(
+                datetime.timezone.utc).isoformat(),
+            "config": config,
+            "history": history}
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(snap, f, indent=2, default=str)
+    os.replace(tmp, path)
+    return path
+
+
+def load_benches(out_dir: Optional[str] = None) -> dict:
+    """All ``BENCH_*.json`` snapshots in a results dir, keyed by suite."""
+    out = {}
+    for p in sorted(glob.glob(os.path.join(results_dir(out_dir),
+                                           "BENCH_*.json"))):
+        try:
+            with open(p) as f:
+                snap = json.load(f)
+        except (OSError, ValueError):
+            continue
+        suite = snap.get("suite") or \
+            os.path.basename(p)[len("BENCH_"):-len(".json")]
+        out[suite] = snap
+    return out

@@ -1,0 +1,108 @@
+"""Per-kernel timing harness (DESIGN.md §14): measured µs next to the
+HBM-pass model for the ZO hot-path kernels.
+
+The flat hot path's whole performance argument is HBM passes (DESIGN.md
+§7): ``zo_walk`` regenerates directions in-kernel so a perturbation step
+reads+writes the buffer ONCE (2 passes) instead of streaming 3.5, and
+``zo_replay`` folds all b2 directions of an iterate into one pass pair.
+This harness times each kernel and prints the pass model beside it, so a
+kernel regression shows up as measured-µs drifting away from a CONSTANT
+model column — and on real HBM the model converts to a projected µs at an
+assumed bandwidth.
+
+CPU numbers come from the Pallas interpreter (regression trackers, not TPU
+projections — DESIGN.md §6); the model columns are platform-independent.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+# default projection bandwidth: TPU v5e HBM ~819 GB/s (the roofline
+# constant benchmarks/roofline_report.py also uses)
+HBM_GBPS = 819.0
+
+
+def time_fn(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Steady-state µs per call (compile/warmup excluded, blocked)."""
+    out = None
+    for _ in range(max(1, warmup)):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(max(1, iters)):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / max(1, iters) * 1e6
+
+
+@dataclass
+class KernelTiming:
+    """One kernel's measured time beside its HBM traffic model."""
+    name: str
+    measured_us: float
+    hbm_passes: float       # full passes over the principal buffer
+    hbm_bytes: int          # modeled bytes moved per call
+    model_us: float = 0.0   # hbm_bytes at the projection bandwidth
+    meta: dict = field(default_factory=dict)
+
+    def rows(self):
+        """As benchmark-harness (name, us, derived) tuples."""
+        return [(f"{self.name}_us", self.measured_us, self.hbm_passes),
+                (f"{self.name}_hbm_model_us", self.model_us,
+                 self.hbm_bytes)]
+
+
+def _model(nbytes: float, passes: float, gbps: float) -> float:
+    return nbytes / (gbps * 1e9) * 1e6  # µs
+
+
+def kernel_report(*, n: int = None, b2: int = 8, m: int = 8,
+                  gbps: float = HBM_GBPS, interpret=None) -> list:
+    """Time the three ZO hot-path kernels at a common working size.
+
+    ``n`` is the flat buffer length (defaults to one kernel block),
+    ``b2`` the direction count for the replay, ``m`` the cohort size for
+    the AirComp reduce. Returns ``[KernelTiming, ...]`` for
+    ``zo_walk`` / ``zo_replay`` / ``aircomp_reduce``.
+    """
+    from repro.kernels import ops
+    from repro.kernels.zo_axpy import BLOCK
+
+    if n is None:
+        n = BLOCK
+    f32 = jnp.dtype(jnp.float32).itemsize
+    x = jax.random.normal(jax.random.key(0), (n,), jnp.float32)
+    key2 = jax.random.key_data(jax.random.key(1))
+    out = []
+
+    # zo_walk: x read + x' written, directions regenerated in-kernel
+    us = time_fn(lambda: ops.zo_walk(x, key2, [0, 1], [-0.1, 0.1],
+                                     interpret=interpret))
+    out.append(KernelTiming(
+        name=f"zo_walk_n{n}", measured_us=us, hbm_passes=2.0,
+        hbm_bytes=2 * n * f32, model_us=_model(2 * n * f32, 2.0, gbps),
+        meta={"n": n}))
+
+    # zo_replay: one read+write pass folds ALL b2 directions of an iterate
+    coeffs = jnp.linspace(-1.0, 1.0, b2)
+    us = time_fn(lambda: ops.zo_replay(x, key2, coeffs, interpret=interpret))
+    out.append(KernelTiming(
+        name=f"zo_replay_n{n}_b2{b2}", measured_us=us, hbm_passes=2.0,
+        hbm_bytes=2 * n * f32, model_us=_model(2 * n * f32, 2.0, gbps),
+        meta={"n": n, "b2": b2}))
+
+    # aircomp_reduce: the [M, n] delta matrix read once, the mean written
+    deltas = jax.random.normal(jax.random.key(2), (m, n), jnp.float32)
+    scale = jnp.full((m,), 1.0 / m, jnp.float32)
+    us = time_fn(lambda: ops.aircomp_reduce(deltas, scale, n,
+                                            interpret=interpret))
+    nbytes = (m + 1) * n * f32
+    out.append(KernelTiming(
+        name=f"aircomp_reduce_m{m}_n{n}", measured_us=us,
+        hbm_passes=m + 1.0, hbm_bytes=nbytes,
+        model_us=_model(nbytes, m + 1.0, gbps), meta={"m": m, "n": n}))
+    return out

@@ -1,0 +1,122 @@
+"""Per-round communication ledger (DESIGN.md §14).
+
+FedZO's value proposition IS communication efficiency (paper Sec. I), yet
+wire/dense byte accounting used to be scattered per aggregation path
+(``seedcomm.wire_bytes`` on the digital path, ``tree_bytes`` ad hoc in the
+drivers). ``CommsLedger`` unifies it: one dtype-exact byte model per run —
+per-client uplink bytes under the run's actual wire format (dense delta /
+seed-compressed coefficients / analog AirComp symbols), per-client downlink
+(the model broadcast), and the dense baseline — from which every per-round
+and cumulative figure derives.
+
+The ledger is deliberately DETERMINISTIC in the round index and the row's
+own ``m_effective``: annotation never needs evicted ring state, so a
+ring-limited ``history()`` and a full one produce identical rows, and the
+host and engine drivers agree bitwise (the property tests/test_obs.py
+pins). ``m_effective`` (channel truncation, faults) scales the *effective*
+uplink — a masked client transmits nothing — while the nominal figures
+track the provisioned cohort M for capacity planning.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+from repro.utils.tree import tree_bytes
+
+
+def _uplink_mode(cfg) -> str:
+    """The run's uplink wire format, resolved from the config the same way
+    the aggregation paths resolve it."""
+    if cfg.delta_compression == "seed":
+        return "seed"
+    if cfg.aircomp:
+        return "aircomp"
+    return "dense"
+
+
+@dataclass(frozen=True)
+class CommsLedger:
+    """Static byte model of one experiment's communication pattern.
+
+    All figures are bytes per ROUND unless suffixed ``_client``. ``m`` is
+    the nominal cohort size M; the analog AirComp uplink is costed at its
+    dense-equivalent symbol count (d float32 symbols per client) so the
+    compression column stays honest about what the air interface carries.
+    """
+    m: int                       # nominal sampled cohort size per round
+    uplink_client_bytes: int     # per-client uplink under the wire format
+    downlink_client_bytes: int   # per-client model broadcast
+    dense_client_bytes: int      # dense-delta baseline per client
+    mode: str = "dense"          # dense | seed | aircomp
+
+    @classmethod
+    def from_run(cls, cfg, params, m: int = None) -> "CommsLedger":
+        """Build the ledger for a run: ``params`` fixes the dense byte
+        count (dtype-exact leaf nbytes), ``cfg`` the wire format and the
+        seed-compression geometry (H·b2 coefficients + the 8-byte threefry
+        key + the 4-byte lr — exactly ``seedcomm.wire_bytes``)."""
+        from repro.core import seedcomm
+
+        dense = tree_bytes(params)
+        mode = _uplink_mode(cfg)
+        if mode == "seed":
+            up = seedcomm.wire_bytes_model(cfg)
+        else:
+            up = dense
+        return cls(m=int(m if m is not None else cfg.n_participating),
+                   uplink_client_bytes=int(up),
+                   downlink_client_bytes=int(dense),
+                   dense_client_bytes=int(dense), mode=mode)
+
+    # -- per-round figures ---------------------------------------------------
+    def round_uplink_bytes(self) -> int:
+        return self.m * self.uplink_client_bytes
+
+    def round_downlink_bytes(self) -> int:
+        return self.m * self.downlink_client_bytes
+
+    def round_dense_bytes(self) -> int:
+        return self.m * self.dense_client_bytes
+
+    def compression_ratio(self) -> float:
+        """Dense-baseline bytes over actual wire bytes (≥ 1 on the seed
+        path, 1.0 dense/aircomp)."""
+        return self.round_dense_bytes() / max(1, self.round_uplink_bytes())
+
+    # -- history annotation --------------------------------------------------
+    def annotate(self, rows: list) -> list:
+        """Add the ledger columns to history rows IN PLACE (and return
+        them): per-round ``wire_bytes``/``dense_bytes``/``downlink_bytes``,
+        cumulative ``wire_bytes_total``/``downlink_bytes_total`` (rounds
+        0..t inclusive — a pure function of t, so ring eviction cannot skew
+        it), ``compression_ratio``, and — when the row carries
+        ``m_effective`` — ``wire_bytes_effective`` (only surviving clients
+        transmit). Structured event rows (rollbacks) and eval-only rows
+        (rounds whose ring metrics were evicted carry nothing but the eval
+        buffer's columns — a contract tests/test_workloads.py pins) pass
+        through untouched."""
+        up, down = self.round_uplink_bytes(), self.round_downlink_bytes()
+        for row in rows:
+            if ("event" in row or "round" not in row
+                    or "mean_local_loss" not in row):
+                continue
+            t = int(row["round"])
+            row["wire_bytes"] = up
+            row["dense_bytes"] = self.round_dense_bytes()
+            row["downlink_bytes"] = down
+            row["wire_bytes_total"] = (t + 1) * up
+            row["downlink_bytes_total"] = (t + 1) * down
+            row["compression_ratio"] = self.compression_ratio()
+            if "m_effective" in row:
+                row["wire_bytes_effective"] = int(
+                    row["m_effective"] * self.uplink_client_bytes)
+        return rows
+
+    def manifest(self) -> dict:
+        """The ledger as a manifest block (plain json types)."""
+        d = dataclasses.asdict(self)
+        d["round_uplink_bytes"] = self.round_uplink_bytes()
+        d["round_downlink_bytes"] = self.round_downlink_bytes()
+        d["compression_ratio"] = self.compression_ratio()
+        return d

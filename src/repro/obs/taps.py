@@ -1,0 +1,66 @@
+"""In-scan metric taps (DESIGN.md §14).
+
+``RoundTap`` is the host half of the engine's opt-in telemetry stream: the
+compiled round calls ``io_callback(tap.emit, ...)`` every ``tap.every``
+rounds (gated by a ``lax.cond``, so non-tap rounds pay nothing), and
+``emit`` normalizes the device scalars into a plain row and hands it to the
+sink. With ``tap_every=None`` (the default everywhere) the tap never enters
+the traced program and the engine keeps its one-host-sync property —
+taps-off runs are bit-identical to pre-obs builds (pinned by the golden
+fixtures).
+
+The callback is UNORDERED (``ordered=False``): ordered io_callbacks are not
+available under ``lax.cond``, and ordering is recovered for free because
+every row carries its round index. Sinks receive rows in execution order in
+practice on a single device; consumers that must be robust sort by
+``row["round"]``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.obs.sinks import MetricsSink
+
+
+def _scalar(v):
+    """Device/numpy scalar -> python scalar, exactly. Floats widen to
+    float64 (lossless from float32), ints to python int, bools to bool."""
+    a = np.asarray(v)
+    if a.dtype.kind == "b":
+        return bool(a)
+    if a.dtype.kind in "iu":
+        return int(a)
+    return float(a)
+
+
+@dataclass
+class RoundTap:
+    """One tap stream: a sink plus the in-scan cadence.
+
+    ``every`` is the ``tap_every=k`` of the engine API: the scan emits the
+    round's metrics on rounds where ``t % every == 0``. ``emitted`` counts
+    rows actually delivered (the ≥ R/k acceptance check reads it).
+    """
+    sink: MetricsSink
+    every: int = 1
+    meta: dict = field(default_factory=dict)
+    emitted: int = 0
+
+    def __post_init__(self):
+        if int(self.every) < 1:
+            raise ValueError(f"tap_every must be >= 1, got {self.every}")
+        self.every = int(self.every)
+
+    def emit(self, t, metrics: dict) -> None:
+        """The io_callback target: one round's metrics -> one sink row."""
+        row = {"round": int(np.asarray(t))}
+        row.update({k: _scalar(v) for k, v in metrics.items()})
+        if self.meta:
+            row.update(self.meta)
+        self.sink.write(row)
+        self.emitted += 1
+
+    def close(self) -> None:
+        self.sink.close()

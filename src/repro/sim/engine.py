@@ -37,21 +37,39 @@ segment. A run killed between segments resumes bit-exactly
 (``resume=True``), and the per-segment sync doubles as the divergence
 guard: a non-finite carry rolls back to the last good snapshot with lr
 backoff, bounded by ``max_retries``.
+
+Observability (DESIGN.md §14): ``run_experiment(..., sink=obs.JsonlSink(p),
+tap_every=k)`` streams every k-th round's metrics to the sink LIVE from
+inside the compiled scan (an unordered ``io_callback`` behind a
+``lax.cond``, so non-tap rounds pay nothing); the default ``tap_every=None``
+never enters the trace and keeps the one-host-sync property bit-identical
+to the golden fixtures. ``tracer=obs.Tracer(...)`` records nested
+compile/execute (or per-segment) spans — compile reported exactly once per
+static shape — and optionally drops a ``jax.profiler`` trace. Every result
+carries an ``obs.CommsLedger`` (``history()`` rows gain per-round
+wire/dense bytes and cumulative uplink/downlink totals), and runs with a
+checkpoint dir or a file-backed sink emit a run manifest beside their
+artifacts.
 """
 from __future__ import annotations
 
 import dataclasses
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import io_callback
 
 from repro.configs.base import FedZOConfig
 from repro.core import aircomp
 from repro.core import strategy as strategy_mod
 from repro.core.strategy import _static_positive  # noqa: F401  (re-export)
+from repro.obs import manifest as obs_manifest
+from repro.obs.ledger import CommsLedger
+from repro.obs.taps import RoundTap
 from repro.sim.faults import DivergenceError, FaultModel
 from repro.sim.store import ClientStore, sample_batches, sample_participants
 from repro.utils.tree import tree_zeros_like
@@ -140,7 +158,10 @@ class ExperimentResult:
     [N] availability states when a ``FaultModel`` was attached; ``events``
     holds structured host-side rows (divergence rollbacks); ``strategy``
     the algorithm name and ``strategy_state`` its final carry (the stacked
-    per-client controls/duals + server control for scaffold/feddyn)."""
+    per-client controls/duals + server control for scaffold/feddyn).
+    ``ledger`` is the run's ``obs.CommsLedger`` (``history()`` rows get the
+    byte columns from it) and ``manifest`` the emitted run-manifest dict
+    (None when the run had nowhere to write one)."""
     params: Any
     momentum: Any
     key: Any
@@ -153,6 +174,8 @@ class ExperimentResult:
     events: list = field(default_factory=list)
     strategy: str = "fedzo"
     strategy_state: Any = None
+    ledger: Any = None
+    manifest: Any = None
 
     def recorded_rounds(self) -> np.ndarray:
         """Round numbers still present in the ring, oldest→newest."""
@@ -192,7 +215,7 @@ def experiment_core(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
                     eval_fn=None, eval_every: int = 0, ring_size: int = 0,
                     round_fn=None, faults: Optional[FaultModel] = None,
                     fault_state=None, t0=0, total_rounds: int = 0,
-                    ring=None, ebuf=None):
+                    ring=None, ebuf=None, tap: Optional[RoundTap] = None):
     """The traceable experiment body: scan ``rounds`` round steps, ring-
     buffer the metrics, eval in-scan every ``eval_every`` rounds. Returns
     (params, momentum, key, fault_state, zstate, metrics_ring, evals).
@@ -204,7 +227,12 @@ def experiment_core(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
     experiment — the ring/eval buffers are sized (and slotted) against the
     TOTAL, and partially-filled buffers are threaded back in via
     ``ring``/``ebuf``, so k-round segments write exactly the cells the
-    uninterrupted scan would."""
+    uninterrupted scan would.
+
+    ``tap`` (an ``obs.RoundTap``) streams the metrics of rounds where
+    ``t % tap.every == 0`` to the tap's sink live, via an unordered
+    ``io_callback`` behind a ``lax.cond``; ``tap=None`` (default) adds
+    NOTHING to the trace, preserving the one-host-sync bit-exact program."""
     strat = _resolve(strategy, algo, cfg)
     total = total_rounds or rounds
     ring_alloc = min(total, ring_size) if ring_size else total
@@ -230,6 +258,15 @@ def experiment_core(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
         slot = jnp.mod(t, ring_alloc)
         ring = {k: ring[k].at[slot].set(metrics[k].astype(ring[k].dtype))
                 for k in ring}
+        if tap is not None:
+            # unordered: ordered io_callbacks are unsupported under cond,
+            # and every row carries its round index anyway (obs/taps.py)
+            def _emit(args):
+                io_callback(tap.emit, None, args[0], args[1], ordered=False)
+                return jnp.int32(0)
+
+            jax.lax.cond(jnp.mod(t, tap.every) == 0, _emit,
+                         lambda args: jnp.int32(0), (t, metrics))
         if do_eval:
             def run_eval(args):
                 buf, p = args
@@ -253,13 +290,13 @@ def make_experiment_fn(loss_fn, cfg: FedZOConfig, rounds: int, *,
                        algo: Optional[str] = None, strategy=None,
                        eval_fn=None, eval_every: int = 0,
                        ring_size: int = 0, round_fn=None, faults=None,
-                       donate: bool = True) -> Callable:
+                       donate: bool = True, tap=None) -> Callable:
     """Compile the whole experiment once: returns a jitted
     ``fn(params, momentum, key, fstate, zstate, store) -> (params',
     momentum', key', fstate', zstate', metrics_ring, evals)`` with the
     carry donated (pass ``momentum=None`` when cfg.server_momentum is 0,
     ``fstate=None`` without a fault model, and ``zstate=None`` for the
-    stateless strategies)."""
+    stateless strategies). ``tap`` attaches an in-scan ``obs.RoundTap``."""
     strat = _resolve(strategy, algo, cfg)
 
     def fn(params, momentum, key, fstate, zstate, store):
@@ -267,7 +304,7 @@ def make_experiment_fn(loss_fn, cfg: FedZOConfig, rounds: int, *,
                                momentum, strategy=strat, zstate=zstate,
                                eval_fn=eval_fn, eval_every=eval_every,
                                ring_size=ring_size, round_fn=round_fn,
-                               faults=faults, fault_state=fstate)
+                               faults=faults, fault_state=fstate, tap=tap)
 
     return jax.jit(fn, donate_argnums=(0, 1, 2, 3, 4) if donate else ())
 
@@ -279,8 +316,9 @@ def run_experiment(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
                    donate: bool = True, checkpoint_every: int = 0,
                    checkpoint_dir=None, resume: bool = False,
                    max_segments=None, segment_callback=None,
-                   max_retries: int = 3,
-                   lr_backoff: float = 0.5) -> ExperimentResult:
+                   max_retries: int = 3, lr_backoff: float = 0.5,
+                   sink=None, tap_every: Optional[int] = None,
+                   tracer=None) -> ExperimentResult:
     """Run a whole experiment inside ONE compiled program.
 
     The algorithm comes from the strategy registry: ``strategy=`` (a name
@@ -306,6 +344,15 @@ def run_experiment(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
     raises ``DivergenceError``. ``max_segments`` bounds the segments run
     this call (for tests/preemption drills); ``segment_callback(round,
     total)`` fires after every successful snapshot.
+
+    Observability: ``sink=`` (an ``obs.MetricsSink``) + ``tap_every=k``
+    stream every k-th round's metrics LIVE from inside the scan; both
+    default off, which keeps the compiled program byte-identical to the
+    pre-obs engine. ``tracer=`` (an ``obs.Tracer``) records compile vs
+    execute/segment spans (AOT-compiled, so compile is reported exactly
+    once per static shape) and optionally a jax.profiler trace. Every
+    result carries ``result.ledger``; runs with a ``checkpoint_dir`` or a
+    file-backed sink also write a run manifest next to their artifacts.
     """
     strat = _resolve(strategy, algo, cfg)
     if key is None:
@@ -315,6 +362,15 @@ def run_experiment(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
     fstate = faults.init_state(store.n_clients) if faults is not None else None
     zstate = strat.init_state(params, cfg, store.n_clients)
     do_eval = eval_fn is not None and eval_every > 0
+    tap = None
+    if tap_every is not None:
+        if sink is None:
+            raise ValueError("tap_every=k needs a sink= to stream into")
+        tap = RoundTap(sink, tap_every)
+    # the byte model reads params metadata, so build it BEFORE the run
+    # donates the buffers
+    ledger = CommsLedger.from_run(cfg, params)
+    n_clients = store.n_clients
     if checkpoint_every > 0:
         return _run_checkpointed(
             loss_fn, params, store, cfg, rounds, strategy=strat,
@@ -324,20 +380,41 @@ def run_experiment(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
             checkpoint_every=checkpoint_every,
             checkpoint_dir=checkpoint_dir, resume=resume,
             max_segments=max_segments, segment_callback=segment_callback,
-            max_retries=max_retries, lr_backoff=lr_backoff)
+            max_retries=max_retries, lr_backoff=lr_backoff, tap=tap,
+            tracer=tracer, ledger=ledger)
     fn = make_experiment_fn(loss_fn, cfg, rounds, strategy=strat,
                             eval_fn=eval_fn, eval_every=eval_every,
                             ring_size=ring_size, round_fn=round_fn,
-                            faults=faults, donate=donate)
-    params, momentum, key, fstate, zstate, ring, ebuf = fn(
-        params, momentum, key, fstate, zstate, store)
+                            faults=faults, donate=donate, tap=tap)
+    args = (params, momentum, key, fstate, zstate, store)
+    if tracer is not None:
+        from repro.checkpoint.checkpoint import config_hash
+        ckey = ("experiment", rounds, config_hash(cfg), strat.name,
+                eval_every, ring_size, donate, tap is not None)
+        with tracer.profile():
+            compiled = tracer.timed_compile(ckey, fn, *args)
+            with tracer.span("execute", rounds=rounds):
+                out = jax.block_until_ready(compiled(*args))
+    else:
+        out = fn(*args)
+    params, momentum, key, fstate, zstate, ring, ebuf = out
     eval_rounds = np.arange(0, rounds, eval_every) if do_eval \
         else np.arange(0)
-    return ExperimentResult(params=params, momentum=momentum, key=key,
-                            metrics=ring, evals=ebuf, rounds=rounds,
-                            ring_size=min(rounds, ring_size) or rounds,
-                            eval_rounds=eval_rounds, fault_state=fstate,
-                            strategy=strat.name, strategy_state=zstate)
+    result = ExperimentResult(params=params, momentum=momentum, key=key,
+                              metrics=ring, evals=ebuf, rounds=rounds,
+                              ring_size=min(rounds, ring_size) or rounds,
+                              eval_rounds=eval_rounds, fault_state=fstate,
+                              strategy=strat.name, strategy_state=zstate,
+                              ledger=ledger)
+    sink_path = getattr(sink, "path", None)
+    if sink_path:
+        result.manifest = obs_manifest.build_manifest(
+            cfg, strategy=strat.name, rounds=rounds, n_clients=n_clients,
+            ledger=ledger, faults=faults, events=result.events,
+            extra={"tap_every": tap.every} if tap is not None else None)
+        obs_manifest.write_manifest(f"{sink_path}.manifest.json",
+                                    result.manifest)
+    return result
 
 
 def _carry_to_state(params, momentum, key, fstate, zstate, ring,
@@ -392,7 +469,8 @@ def _run_checkpointed(loss_fn, params, store, cfg, rounds, *, strategy,
                       round_fn, faults, fstate, zstate, donate,
                       checkpoint_every, checkpoint_dir, resume,
                       max_segments, segment_callback, max_retries,
-                      lr_backoff) -> ExperimentResult:
+                      lr_backoff, tap=None, tracer=None,
+                      ledger=None) -> ExperimentResult:
     """The durable segment loop behind ``run_experiment(...,
     checkpoint_every=k)``. Invariants:
 
@@ -451,6 +529,17 @@ def _run_checkpointed(loss_fn, params, store, cfg, rounds, *, strategy,
                 "strategy": strat.name, "config_hash": orig_hash,
                 "lr": cur_lr, "events": events}
 
+    def write_run_manifest():
+        man = obs_manifest.build_manifest(
+            cfg, strategy=strat.name, rounds=rounds,
+            n_clients=store.n_clients, ledger=ledger, faults=faults,
+            events=events,
+            extra={"checkpoint_every": checkpoint_every, "lr": cur_lr,
+                   "rounds_done": t,
+                   "tap_every": tap.every if tap is not None else None})
+        obs_manifest.write_manifest(checkpoint_dir, man)
+        return man
+
     if t == 0:
         # round-0 snapshot: the rollback anchor for a first-segment
         # divergence (the donated pre-segment carry is gone by then)
@@ -459,6 +548,7 @@ def _run_checkpointed(loss_fn, params, store, cfg, rounds, *, strategy,
                             ebuf))
         ckpt.save_run_state(checkpoint_dir, state0, round_idx=0,
                             meta=checkpoint_meta())
+    write_run_manifest()   # provisional: rewritten with final events below
 
     seg_fns: dict = {}
 
@@ -474,52 +564,71 @@ def _run_checkpointed(loss_fn, params, store, cfg, rounds, *, strategy,
                     strategy=strat, zstate=zstate, eval_fn=eval_fn,
                     eval_every=eval_every, ring_size=ring_size,
                     round_fn=round_fn, faults=faults, fault_state=fstate,
-                    t0=t0, total_rounds=rounds, ring=ring, ebuf=ebuf)
+                    t0=t0, total_rounds=rounds, ring=ring, ebuf=ebuf,
+                    tap=tap)
 
             seg_fns[chunk] = jax.jit(
                 fn, donate_argnums=(0, 1, 2, 3, 4, 5, 6) if donate else ())
         return seg_fns[chunk]
 
     retries, segments_done = 0, 0
-    while t < rounds:
-        chunk = min(checkpoint_every, rounds - t)
-        out = segment_fn(chunk)(params, momentum, key, fstate, zstate, ring,
-                                ebuf, jnp.int32(t), store)
-        # ONE host sync per segment: fetch the full carry, then everything
-        # below (divergence check + atomic save) is host-side numpy
-        state = jax.device_get(_carry_to_state(*out))
-        t_next = t + chunk
-        if not _finite_state(state, range(t, t_next), ring_alloc,
-                             eval_every, do_eval):
-            retries += 1
-            if retries > max_retries:
-                raise DivergenceError(t_next, max_retries, cur_lr)
-            cur_lr *= lr_backoff
-            events.append({"round": t_next, "event": "rollback",
-                           "from_round": t, "retry": retries, "lr": cur_lr})
-            seg_fns.clear()  # the backed-off lr is baked into the program
-            snap = ckpt.latest_run_state(checkpoint_dir)
-            good, _ = ckpt.restore_run_state(snap, state)
-            params, momentum, key, fstate, zstate, ring, ebuf = \
-                _state_to_carry(good, cfg)
-            continue
-        retries = 0
-        params, momentum, key, fstate, zstate, ring, ebuf = out
-        t = t_next
-        ckpt.save_run_state(checkpoint_dir, state, round_idx=t,
-                            meta=checkpoint_meta())
-        segments_done += 1
-        if segment_callback is not None:
-            segment_callback(t, rounds)
-        if max_segments is not None and segments_done >= max_segments:
-            break
+    with (tracer.profile() if tracer is not None else nullcontext()):
+        while t < rounds:
+            chunk = min(checkpoint_every, rounds - t)
+            jitted = segment_fn(chunk)
+            args = (params, momentum, key, fstate, zstate, ring, ebuf,
+                    jnp.int32(t), store)
+            if tracer is not None:
+                # one compile span per (chunk size, lr) program — reused
+                # executable across same-shape segments
+                run = tracer.timed_compile(
+                    ("segment", chunk, cur_lr, orig_hash), jitted, *args)
+                seg_span = tracer.span("segment", t0=t, chunk=chunk)
+            else:
+                run, seg_span = jitted, nullcontext()
+            with seg_span:
+                out = run(*args)
+                # ONE host sync per segment: fetch the full carry, then
+                # everything below (divergence check + atomic save) is
+                # host-side numpy
+                state = jax.device_get(_carry_to_state(*out))
+            t_next = t + chunk
+            if not _finite_state(state, range(t, t_next), ring_alloc,
+                                 eval_every, do_eval):
+                retries += 1
+                if retries > max_retries:
+                    raise DivergenceError(t_next, max_retries, cur_lr)
+                cur_lr *= lr_backoff
+                events.append({"round": t_next, "event": "rollback",
+                               "from_round": t, "retry": retries,
+                               "lr": cur_lr})
+                seg_fns.clear()  # the backed-off lr is baked into the
+                if tracer is not None:   # program (and its executable)
+                    tracer.invalidate_compiled()
+                snap = ckpt.latest_run_state(checkpoint_dir)
+                good, _ = ckpt.restore_run_state(snap, state)
+                params, momentum, key, fstate, zstate, ring, ebuf = \
+                    _state_to_carry(good, cfg)
+                continue
+            retries = 0
+            params, momentum, key, fstate, zstate, ring, ebuf = out
+            t = t_next
+            ckpt.save_run_state(checkpoint_dir, state, round_idx=t,
+                                meta=checkpoint_meta())
+            segments_done += 1
+            if segment_callback is not None:
+                segment_callback(t, rounds)
+            if max_segments is not None and segments_done >= max_segments:
+                break
 
+    manifest = write_run_manifest()   # final: full event stream, rounds_done
     eval_rounds = np.arange(0, t, eval_every) if do_eval else np.arange(0)
     return ExperimentResult(params=params, momentum=momentum, key=key,
                             metrics=ring, evals=ebuf, rounds=t,
                             ring_size=ring_alloc, eval_rounds=eval_rounds,
                             fault_state=fstate, events=list(events),
-                            strategy=strat.name, strategy_state=zstate)
+                            strategy=strat.name, strategy_state=zstate,
+                            ledger=ledger, manifest=manifest)
 
 
 def history(result: ExperimentResult, *, start_round: int = 0) -> list:
@@ -531,7 +640,15 @@ def history(result: ExperimentResult, *, start_round: int = 0) -> list:
     Eval rounds evicted from the metrics ring (a long run with a small
     ``ring_size``) still surface as eval-only rows — the in-scan evals live
     in their own [n_evals] buffer, so the full accuracy curve survives
-    however small the ring is."""
+    however small the ring is.
+
+    Results carrying a comms ledger (every ``run_experiment`` result) get
+    the byte columns appended host-side: per-round ``wire_bytes`` /
+    ``dense_bytes`` / ``downlink_bytes``, cumulative ``wire_bytes_total``
+    / ``downlink_bytes_total``, ``compression_ratio``, and
+    ``wire_bytes_effective`` on rows that report ``m_effective``. They are
+    annotations, NOT ring contents — the in-scan metric set (and thus the
+    compiled program and the golden fixtures) is untouched."""
     mets = jax.device_get(result.metrics)
     evals = jax.device_get(result.evals)
     ev_by_round = {int(t): {k: float(v[i]) for k, v in evals.items()}
@@ -554,4 +671,6 @@ def history(result: ExperimentResult, *, start_round: int = 0) -> list:
         out.extend({**e, "round": start_round + int(e["round"])}
                    for e in result.events)
         out.sort(key=lambda r: (r["round"], "event" not in r))
+    if result.ledger is not None:
+        result.ledger.annotate(out)
     return out

@@ -110,6 +110,14 @@ class FaultModel:
         denom = self.p_fail + self.p_recover
         return 1.0 if denom == 0 else self.p_recover / denom
 
+    def describe(self) -> dict:
+        """The fault-process configuration as a plain-JSON manifest block
+        (obs/manifest.py), with the derived stationary availability so a
+        manifest reader sees the expected up-fraction at a glance."""
+        d = dataclasses.asdict(self)
+        d["stationary_up"] = self.stationary_up
+        return d
+
     # -- carry state ---------------------------------------------------------
     def init_state(self, n_clients: int):
         """Round-0 availability state: every client up. [N] bool, lives in

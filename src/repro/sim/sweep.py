@@ -57,7 +57,7 @@ def run_sweep(loss_fn, params, store: ClientStore, base_cfg: FedZOConfig,
               scenarios: Sequence[dict], rounds: int, *,
               algo: Optional[str] = None, strategy=None, eval_fn=None,
               eval_every: int = 0, ring_size: int = 0,
-              out_csv: Optional[str] = None) -> list:
+              out_csv: Optional[str] = None, tracer=None) -> list:
     """Run every scenario (dicts of FedZOConfig overrides) for ``rounds``
     rounds; one jit per static-shape group, the dynamic axis vmapped.
 
@@ -66,6 +66,12 @@ def run_sweep(loss_fn, params, store: ClientStore, base_cfg: FedZOConfig,
     applies to every scenario, otherwise each group's ``cfg.strategy``
     decides, so ``scenario_grid(strategy=("fedzo", "fedprox"))`` sweeps
     the algorithm itself as a static axis.
+
+    ``tracer=`` (an ``obs.Tracer``) records one ``compile`` span per
+    static-shape group plus an ``execute`` span per group run, so a grid's
+    wall time decomposes into its per-program compiles — the number the
+    static/dynamic split exists to control. (In-scan taps don't apply
+    here: the per-scenario streams are interleaved under vmap.)
 
     Returns one record per scenario:
     ``{"scenario": dict, "strategy": name, "metrics": {name: [ring]
@@ -100,7 +106,16 @@ def run_sweep(loss_fn, params, store: ClientStore, base_cfg: FedZOConfig,
                 ring_size=ring_size)
             return out[5], out[6]
 
-        ring, ebuf = jax.jit(jax.vmap(one))(dyn_stack, seeds)
+        jitted = jax.jit(jax.vmap(one))
+        if tracer is not None:
+            run = tracer.timed_compile(
+                ("sweep", static, strat.name, rounds, len(members)),
+                jitted, dyn_stack, seeds)
+            with tracer.span("execute", group=str(dict(static)),
+                             scenarios=len(members)):
+                ring, ebuf = jax.block_until_ready(run(dyn_stack, seeds))
+        else:
+            ring, ebuf = jitted(dyn_stack, seeds)
         ring = jax.device_get(ring)
         ebuf = jax.device_get(ebuf)
         eval_rounds = (np.arange(0, rounds, eval_every)
