@@ -21,6 +21,10 @@ Rows:
 - ``sim/sharded_dev{n}_us_per_round`` — the clients-axis shard_map round
   inside the engine on a forced n-device host platform (subprocess), n ∈
   {1, 2}: the device-scaling story at laptop scale.
+- ``tiered/*`` (``run_tiered``, snapshot ``BENCH_tiered.json``) — the
+  host-resident HostStore streaming engine vs the resident scan on the
+  same experiment, plus an N=100k-client CPU run with prefetch-stall and
+  host/device residency accounting (DESIGN.md §15).
 
 CPU numbers are regression trackers, not TPU projections (§6).
 """
@@ -232,4 +236,99 @@ def run_algos():
         else:
             rows.append((f"algos/{name}_overhead_vs_fedzo_pct", 0.0,
                          (us / base_us - 1.0) * 100.0))
+    return rows
+
+
+def _ragged_population(n_clients, lo, hi, n_features=24, n_classes=4,
+                       seed=0):
+    """A size-skewed synthetic federation at arbitrary N — the tiered
+    store's regime. Row counts are drawn uniform [lo, hi); features come
+    from one make_classification pool sliced per client."""
+    from repro.data.synthetic import make_classification
+
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(lo, hi, size=n_clients)
+    x, y = make_classification(int(sizes.sum()), n_features, n_classes,
+                               seed=seed)
+    clients, off = [], 0
+    for s in sizes:
+        clients.append({"x": x[off:off + s], "y": y[off:off + s]})
+        off += s
+    return clients
+
+
+def run_tiered():
+    """Tiered HostStore vs resident engine (DESIGN.md §15).
+
+    Quickstart-scale rows measure the streaming overhead against the
+    device-resident scan on the SAME (bitwise-identical) experiment:
+    ``tiered/engine_us_per_round`` + ``tiered/overhead_vs_resident_pct``,
+    plus the prefetch-stall and memory-residency accounting
+    (``prefetch_stall_pct``, ``host_bytes``, ``device_bytes`` — the staged
+    segment + one prefetch buffer is ALL the population data on device).
+
+    The ``tiered/scale100k_*`` rows run N=100k clients (ragged, bucketed)
+    on CPU — far past what the resident store's [N, cap] layout would
+    admit alongside itself — and report the same stall/residency numbers
+    (``TIERED_BENCH_CLIENTS`` scales N)."""
+    from repro import sim
+    from repro.models.simple import softmax_init, softmax_loss
+
+    rows = []
+    clients, cfg = _quickstart_setup()
+    fcfg = sim.fast_sim_config(cfg)
+    p0 = softmax_init(None)
+    rounds = max(4, ROUNDS // 2)
+
+    store = sim.build_store(clients)
+    res = sim.run_experiment(softmax_loss, p0, store, fcfg, rounds,
+                             donate=False)            # compile
+    jax.block_until_ready(res.params["w"])
+    t0 = time.perf_counter()
+    res = sim.run_experiment(softmax_loss, p0, store, fcfg, rounds,
+                             donate=False)
+    jax.block_until_ready(res.params["w"])
+    res_us = (time.perf_counter() - t0) / rounds * 1e6
+    rows.append(("tiered/resident_us_per_round", res_us, rounds))
+
+    host = sim.build_host_store(clients, n_buckets=4)
+    tier = sim.run_experiment(softmax_loss, p0, host, fcfg, rounds,
+                              donate=False)           # compile
+    jax.block_until_ready(tier.params["w"])
+    t0 = time.perf_counter()
+    tier = sim.run_experiment(softmax_loss, p0, host, fcfg, rounds,
+                              donate=False)
+    jax.block_until_ready(tier.params["w"])
+    tier_us = (time.perf_counter() - t0) / rounds * 1e6
+    pf = tier.prefetch
+    rows.append(("tiered/engine_us_per_round", tier_us, rounds))
+    rows.append(("tiered/overhead_vs_resident_pct", 0.0,
+                 (tier_us / res_us - 1.0) * 100.0))
+    rows.append(("tiered/prefetch_stall_pct", 0.0,
+                 round(pf["stall_pct"], 2)))
+    rows.append(("tiered/host_bytes", 0.0, pf["host_bytes"]))
+    rows.append(("tiered/device_bytes", 0.0,
+                 pf["device_segment_bytes_max"]))
+
+    # -- N=100k: the regime the resident tier cannot reach ---------------
+    n_big = int(os.environ.get("TIERED_BENCH_CLIENTS", "100000"))
+    big = _ragged_population(n_big, 6, 13, seed=1)
+    import dataclasses
+    bcfg = dataclasses.replace(fcfg, n_devices=n_big, n_participating=32,
+                               b1=4, local_iters=2)
+    bstore = sim.build_host_store(big, n_buckets=4)
+    del big
+    b_rounds = 6
+    bp0 = softmax_init(None, 24, 4)
+    bres = sim.run_experiment(softmax_loss, bp0, bstore, bcfg, b_rounds,
+                              donate=False)
+    jax.block_until_ready(bres.params["w"])
+    bpf = bres.prefetch
+    rows.append(("tiered/scale100k_us_per_round",
+                 bpf["wall_s"] / b_rounds * 1e6, n_big))
+    rows.append(("tiered/scale100k_prefetch_stall_pct", 0.0,
+                 round(bpf["stall_pct"], 2)))
+    rows.append(("tiered/scale100k_host_bytes", 0.0, bpf["host_bytes"]))
+    rows.append(("tiered/scale100k_device_bytes", 0.0,
+                 bpf["device_segment_bytes_max"]))
     return rows

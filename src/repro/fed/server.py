@@ -61,6 +61,12 @@ class FedServer:
         if self.clients is None and self.store is None:
             raise ValueError("FedServer needs client datasets: pass "
                              "clients=[...] and/or store=ClientStore")
+        if self.store is not None:
+            # either store tier plugs in: the host-driven round needs
+            # device residency, so a tiered HostStore materializes here
+            # (bit-identical to build_store on the same clients)
+            from repro.sim.tiered import resolve_store
+            self.store = resolve_store(self.store, tier="resident")
         if self.faults is not None and self.store is None:
             raise ValueError("fault injection runs inside the jitted round "
                              "step — construct the FedServer with a "

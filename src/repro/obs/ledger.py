@@ -85,7 +85,8 @@ class CommsLedger:
         return self.round_dense_bytes() / max(1, self.round_uplink_bytes())
 
     # -- history annotation --------------------------------------------------
-    def annotate(self, rows: list) -> list:
+    def annotate(self, rows: list, staging: dict = None, *,
+                 start_round: int = 0) -> list:
         """Add the ledger columns to history rows IN PLACE (and return
         them): per-round ``wire_bytes``/``dense_bytes``/``downlink_bytes``,
         cumulative ``wire_bytes_total``/``downlink_bytes_total`` (rounds
@@ -95,11 +96,21 @@ class CommsLedger:
         transmit). Structured event rows (rollbacks) and eval-only rows
         (rounds whose ring metrics were evicted carry nothing but the eval
         buffer's columns — a contract tests/test_workloads.py pins) pass
-        through untouched."""
+        through untouched.
+
+        ``staging`` (tiered runs — sim/tiered.py) maps run-local round
+        index -> {"bucket_id", "staged_bytes"}; matching rows gain those
+        columns so host→device staging is auditable in the SAME JSONL
+        stream (``start_round`` undoes the offset ``history()`` applied
+        to ``row["round"]``). Non-tiered runs pass ``staging=None`` and
+        the rows are untouched — the PR 8 sink/row contract holds."""
         up, down = self.round_uplink_bytes(), self.round_downlink_bytes()
         for row in rows:
+            # a row is annotatable when it carries ring metrics; eval-only
+            # rows (evicted ring, eval buffer columns only) pass untouched
             if ("event" in row or "round" not in row
-                    or "mean_local_loss" not in row):
+                    or not ("mean_local_loss" in row
+                            or "m_effective" in row)):
                 continue
             t = int(row["round"])
             row["wire_bytes"] = up
@@ -111,6 +122,10 @@ class CommsLedger:
             if "m_effective" in row:
                 row["wire_bytes_effective"] = int(
                     row["m_effective"] * self.uplink_client_bytes)
+            if staging is not None:
+                srow = staging.get(t - start_round)
+                if srow:
+                    row.update(srow)
         return rows
 
     def manifest(self) -> dict:

@@ -8,6 +8,9 @@
 - ``sweep``  — vmapped scenario grids (one jit per static shape group).
 - ``faults`` — in-jit fault injection (availability chains, stragglers,
   corrupted uploads) + the server-side finite-guard (DESIGN.md §12).
+- ``tiered`` — host-resident bucketed populations behind a cohort stream:
+  only the sampled cohort (+ one prefetch buffer) touches the device,
+  bitwise-identical to the resident engine (DESIGN.md §15).
 """
 from __future__ import annotations
 
@@ -15,13 +18,17 @@ import dataclasses
 
 from repro.configs.base import FedZOConfig
 from repro.sim.engine import (ExperimentResult, experiment_key,
-                              history, make_experiment_fn, make_round_step,
-                              run_experiment)
+                              history, make_cohort_round_step,
+                              make_experiment_fn, make_round_step,
+                              run_experiment, stream_core)
 from repro.sim.faults import DivergenceError, FaultModel, RoundFaults
 from repro.sim.shard import make_clients_mesh, make_sharded_round
-from repro.sim.store import (ClientStore, build_store, sample_batches,
+from repro.sim.store import (ClientStore, CohortBatch, build_store,
+                             sample_batches, sample_cohort_batches,
                              sample_participants)
 from repro.sim.sweep import run_sweep, scenario_grid
+from repro.sim.tiered import (CohortStream, HostStore, build_host_store,
+                              resolve_store, run_tiered_experiment)
 
 
 def fast_sim_config(cfg: FedZOConfig) -> FedZOConfig:

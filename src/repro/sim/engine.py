@@ -71,7 +71,8 @@ from repro.obs import manifest as obs_manifest
 from repro.obs.ledger import CommsLedger
 from repro.obs.taps import RoundTap
 from repro.sim.faults import DivergenceError, FaultModel
-from repro.sim.store import ClientStore, sample_batches, sample_participants
+from repro.sim.store import (ClientStore, CohortBatch, sample_batches,
+                             sample_cohort_batches, sample_participants)
 from repro.utils.tree import tree_zeros_like
 
 
@@ -149,6 +150,66 @@ def make_round_step(loss_fn, cfg: FedZOConfig, *, algo: Optional[str] = None,
     return step
 
 
+def make_cohort_round_step(loss_fn, cfg: FedZOConfig, *,
+                           algo: Optional[str] = None, strategy=None,
+                           round_fn=None,
+                           faults: Optional[FaultModel] = None) -> Callable:
+    """One communication round as a function of a STAGED cohort instead of
+    a device-resident store: ``step((params, momentum, key, zstate),
+    CohortBatch) -> ((params', momentum', key', zstate'), metrics)``.
+
+    The tiered twin of ``make_round_step`` (DESIGN.md §15). Bit-equality
+    with the resident round is by construction:
+
+    - the round walks the SAME per-round key chain (5-way split, 6 with
+      faults) but leaves ``k_part`` unconsumed — the host ``CohortStream``
+      already spent its replica choosing which clients were staged — and
+      the chain depends only on the splits, never on consumption;
+    - minibatches come from ``sample_cohort_batches`` over the staged
+      rows and TRUE sizes, the same randint draws and exact gathers the
+      resident ``sample_batches`` performs;
+    - faults use ``FaultModel.realize`` on the host-replayed availability
+      slice (``CohortBatch.avail``), splitting the same 3-way fault chain;
+    - ``zstate`` is cohort-shaped ({"client": [M, ...], "server": ...})
+      and ``idx = arange(M)``, so the stateful strategies' gather/scatter
+      hooks run unmodified as identity permutations — the [N] master
+      lives on the host and is sliced/scattered around the trace.
+    """
+    strat = _resolve(strategy, algo, cfg)
+    strat.validate(cfg)
+    if round_fn is not None and not strat.supports_round_fn:
+        raise ValueError(
+            f"strategy {strat.name!r} wraps the local phase with loss/state "
+            f"hooks that a custom round_fn (the sharded round) cannot carry "
+            f"— run it through the default fedzo round")
+    weigh = cfg.weight_by_size
+
+    def step(state, cohort: CohortBatch):
+        params, momentum, key, zstate = state
+        if faults is not None:
+            key, k_part, k_batch, k_zo, k_chan, k_fault = \
+                jax.random.split(key, 6)
+        else:
+            key, k_part, k_batch, k_zo, k_chan = round_keys(key)
+        del k_part   # consumed host-side by the CohortStream replay
+        batches = sample_cohort_batches(cohort.data, cohort.sizes, k_batch,
+                                        cfg.local_iters, cfg.b1)
+        # cohort.sizes IS store.sizes[idx] (staged by the stream), so the
+        # weights match the resident round bit-for-bit
+        wkw = ({"weights": aircomp.size_weights(cohort.sizes)}
+               if weigh else {})
+        if faults is not None:
+            wkw["faults"] = faults.realize(k_fault, cohort.avail)
+        idx = jnp.arange(cohort.sizes.shape[0], dtype=jnp.int32)
+        params, metrics, momentum, zstate = strat.run_round(
+            loss_fn, params, batches, k_zo, cfg, channel_rng=k_chan,
+            momentum=momentum, zstate=zstate, idx=idx, round_fn=round_fn,
+            **wkw)
+        return (params, momentum, key, zstate), metrics
+
+    return step
+
+
 @dataclass
 class ExperimentResult:
     """Host-side container for one engine run. ``metrics`` holds the ring
@@ -161,7 +222,10 @@ class ExperimentResult:
     per-client controls/duals + server control for scaffold/feddyn).
     ``ledger`` is the run's ``obs.CommsLedger`` (``history()`` rows get the
     byte columns from it) and ``manifest`` the emitted run-manifest dict
-    (None when the run had nowhere to write one)."""
+    (None when the run had nowhere to write one). Tiered runs
+    (sim/tiered.py) additionally fill ``staging`` (round -> {bucket_id,
+    staged_bytes}, merged into ``history()`` rows) and ``prefetch`` (the
+    stream's stall/byte accounting)."""
     params: Any
     momentum: Any
     key: Any
@@ -176,6 +240,8 @@ class ExperimentResult:
     strategy_state: Any = None
     ledger: Any = None
     manifest: Any = None
+    staging: Any = None
+    prefetch: Any = None
 
     def recorded_rounds(self) -> np.ndarray:
         """Round numbers still present in the ring, oldest→newest."""
@@ -187,17 +253,15 @@ class ExperimentResult:
         return history(self, start_round=start_round)
 
 
-def _zero_buffers(loss_fn, params, store, cfg, momentum, key, fstate, zstate,
-                  *, strategy, round_fn, faults, eval_fn, ring_alloc,
-                  n_evals):
+def _zero_buffers(step, state0, x0, *, eval_fn, params, ring_alloc, n_evals):
     """Zero-initialized metrics ring + eval buffer with the dtypes the
-    round step / eval_fn will write — via ``jax.eval_shape``, so nothing
-    is executed. Shared by the single-shot scan and the segment runner (the
-    buffers must be identical for chunked ≡ single-shot bit-equality)."""
-    step = make_round_step(loss_fn, cfg, strategy=strategy,
-                           round_fn=round_fn, faults=faults)
-    state0 = (params, momentum, key, fstate, zstate)
-    m_shapes = jax.eval_shape(lambda s: step(s, store)[1], state0)
+    round step / eval_fn will write — via ``jax.eval_shape`` over an
+    example round input ``x0`` (the store, or a ``CohortBatch`` of
+    ``ShapeDtypeStruct``s on the tiered path), so nothing is executed.
+    Shared by the single-shot scan, the segment runner, and the tiered
+    stream (the buffers must be identical for chunked ≡ single-shot ≡
+    tiered bit-equality)."""
+    m_shapes = jax.eval_shape(lambda s, x: step(s, x)[1], state0, x0)
     ring0 = {k: jnp.zeros((ring_alloc,), v.dtype)
              for k, v in m_shapes.items()}
     if eval_fn is not None and n_evals:
@@ -207,6 +271,50 @@ def _zero_buffers(loss_fn, params, store, cfg, momentum, key, fstate, zstate,
     else:
         ebuf0 = {}
     return ring0, ebuf0
+
+
+def _scan_rounds(step, state0, ring, ebuf, ts, xs=None, *, ring_alloc,
+                 eval_fn=None, eval_every: int = 0,
+                 tap: Optional[RoundTap] = None):
+    """The engine's inner per-round loop, shared by the store-resident
+    ``experiment_core`` (``xs=None`` — the step closes over the store) and
+    the tiered ``stream_core`` (``xs`` = the staged cohort stream, leaves
+    [len(ts), ...]): scan ``step`` over the global round indices ``ts``,
+    ring-buffer each round's metrics (slot = t % ring_alloc), fire the tap
+    and the in-scan eval behind their ``lax.cond``s. One loop body means
+    the two tiers cannot drift in ring/tap/eval semantics."""
+    do_eval = eval_fn is not None and eval_every > 0
+
+    def body(carry, inp):
+        state, ring, ebuf = carry
+        t, x = inp
+        state, metrics = step(state, x)
+        slot = jnp.mod(t, ring_alloc)
+        ring = {k: ring[k].at[slot].set(metrics[k].astype(ring[k].dtype))
+                for k in ring}
+        if tap is not None:
+            # unordered: ordered io_callbacks are unsupported under cond,
+            # and every row carries its round index anyway (obs/taps.py)
+            def _emit(args):
+                io_callback(tap.emit, None, args[0], args[1], ordered=False)
+                return jnp.int32(0)
+
+            jax.lax.cond(jnp.mod(t, tap.every) == 0, _emit,
+                         lambda args: jnp.int32(0), (t, metrics))
+        if do_eval:
+            def run_eval(args):
+                buf, p = args
+                vals = eval_fn(p)
+                return {k: buf[k].at[t // eval_every].set(
+                    vals[k].astype(buf[k].dtype)) for k in buf}
+
+            ebuf = jax.lax.cond(jnp.mod(t, eval_every) == 0, run_eval,
+                                lambda args: args[0], (ebuf, state[0]))
+        return (state, ring, ebuf), None
+
+    (state, ring, ebuf), _ = jax.lax.scan(body, (state0, ring, ebuf),
+                                          (ts, xs))
+    return state, ring, ebuf
 
 
 def experiment_core(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
@@ -244,46 +352,55 @@ def experiment_core(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
     state0 = (params, momentum, key, fault_state, zstate)
     if ring is None or (do_eval and ebuf is None):
         ring0, ebuf0 = _zero_buffers(
-            loss_fn, params, store, cfg, momentum, key, fault_state, zstate,
-            strategy=strat, round_fn=round_fn, faults=faults,
-            eval_fn=eval_fn, ring_alloc=ring_alloc, n_evals=n_evals)
+            step, state0, store, eval_fn=eval_fn, params=params,
+            ring_alloc=ring_alloc, n_evals=n_evals)
         ring = ring0 if ring is None else ring
         ebuf = ebuf0 if ebuf is None else ebuf
     elif ebuf is None:
         ebuf = {}
 
-    def body(carry, t):
-        state, ring, ebuf = carry
-        state, metrics = step(state, store)
-        slot = jnp.mod(t, ring_alloc)
-        ring = {k: ring[k].at[slot].set(metrics[k].astype(ring[k].dtype))
-                for k in ring}
-        if tap is not None:
-            # unordered: ordered io_callbacks are unsupported under cond,
-            # and every row carries its round index anyway (obs/taps.py)
-            def _emit(args):
-                io_callback(tap.emit, None, args[0], args[1], ordered=False)
-                return jnp.int32(0)
-
-            jax.lax.cond(jnp.mod(t, tap.every) == 0, _emit,
-                         lambda args: jnp.int32(0), (t, metrics))
-        if do_eval:
-            def run_eval(args):
-                buf, p = args
-                vals = eval_fn(p)
-                return {k: buf[k].at[t // eval_every].set(
-                    vals[k].astype(buf[k].dtype)) for k in buf}
-
-            ebuf = jax.lax.cond(jnp.mod(t, eval_every) == 0, run_eval,
-                                lambda args: args[0], (ebuf, state[0]))
-        return (state, ring, ebuf), None
-
     ts = jnp.arange(rounds)
     if not (isinstance(t0, int) and t0 == 0):
         ts = ts + t0
-    (state, ring, ebuf), _ = jax.lax.scan(body, (state0, ring, ebuf), ts)
+    state, ring, ebuf = _scan_rounds(
+        lambda s, _: step(s, store), state0, ring, ebuf, ts,
+        ring_alloc=ring_alloc, eval_fn=eval_fn, eval_every=eval_every,
+        tap=tap)
     params, momentum, key, fault_state, zstate = state
     return params, momentum, key, fault_state, zstate, ring, ebuf
+
+
+def stream_core(loss_fn, params, cfg: FedZOConfig, key, momentum, *,
+                strategy=None, zstate=None, xs: CohortBatch, t0,
+                total_rounds: int, ring, ebuf, eval_fn=None,
+                eval_every: int = 0, ring_size: int = 0, round_fn=None,
+                faults: Optional[FaultModel] = None,
+                tap: Optional[RoundTap] = None):
+    """The traceable tiered-segment body (DESIGN.md §15): scan one
+    ``make_cohort_round_step`` per staged round over the cohort stream
+    ``xs`` (a ``CohortBatch`` whose leaves carry a leading [S] rounds
+    axis). The segment covers global rounds [t0, t0+S) of a
+    ``total_rounds``-round experiment; ring/eval buffers are sized and
+    slotted against the TOTAL and threaded through, exactly like
+    ``experiment_core``'s segment mode — the loop body IS
+    ``_scan_rounds``, shared with the resident tier.
+
+    Returns (params, momentum, key, zstate, ring, ebuf). The fault [N]
+    chain and the stateful strategies' [N] client masters do NOT appear
+    here — the stream host-replays the former into ``xs.avail`` and
+    slices the latter into the cohort-shaped ``zstate``."""
+    strat = _resolve(strategy, None, cfg)
+    seg = xs.sizes.shape[0]
+    ring_alloc = min(total_rounds, ring_size) if ring_size else total_rounds
+    step = make_cohort_round_step(loss_fn, cfg, strategy=strat,
+                                  round_fn=round_fn, faults=faults)
+    state0 = (params, momentum, key, zstate)
+    ts = jnp.arange(seg) + t0
+    state, ring, ebuf = _scan_rounds(
+        step, state0, ring, ebuf, ts, xs, ring_alloc=ring_alloc,
+        eval_fn=eval_fn, eval_every=eval_every, tap=tap)
+    params, momentum, key, zstate = state
+    return params, momentum, key, zstate, ring, ebuf
 
 
 def make_experiment_fn(loss_fn, cfg: FedZOConfig, rounds: int, *,
@@ -318,7 +435,8 @@ def run_experiment(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
                    max_segments=None, segment_callback=None,
                    max_retries: int = 3, lr_backoff: float = 0.5,
                    sink=None, tap_every: Optional[int] = None,
-                   tracer=None) -> ExperimentResult:
+                   tracer=None, stream_segment: int = 8,
+                   prefetch: bool = True) -> ExperimentResult:
     """Run a whole experiment inside ONE compiled program.
 
     The algorithm comes from the strategy registry: ``strategy=`` (a name
@@ -353,7 +471,30 @@ def run_experiment(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
     once per static shape) and optionally a jax.profiler trace. Every
     result carries ``result.ledger``; runs with a ``checkpoint_dir`` or a
     file-backed sink also write a run manifest next to their artifacts.
+
+    A ``sim.tiered.HostStore`` is dispatched to the tiered cohort-stream
+    runner (``tiered.run_tiered_experiment``) — same signature, bitwise
+    the same trajectory, host-resident population. ``stream_segment`` /
+    ``prefetch`` tune that tier's staging pipeline only; the resident
+    scan has no staging and ignores them.
     """
+    if not isinstance(store, ClientStore):
+        from repro.sim import tiered
+        if isinstance(store, tiered.HostStore):
+            return tiered.run_tiered_experiment(
+                loss_fn, params, store, cfg, rounds, algo=algo,
+                strategy=strategy, eval_fn=eval_fn, eval_every=eval_every,
+                ring_size=ring_size, key=key, momentum=momentum,
+                round_fn=round_fn, faults=faults, donate=donate,
+                checkpoint_every=checkpoint_every,
+                checkpoint_dir=checkpoint_dir, resume=resume,
+                max_segments=max_segments,
+                segment_callback=segment_callback,
+                max_retries=max_retries, lr_backoff=lr_backoff, sink=sink,
+                tap_every=tap_every, tracer=tracer,
+                stream_segment=stream_segment, prefetch=prefetch)
+        raise TypeError(f"store must be a ClientStore or HostStore, got "
+                        f"{type(store).__name__}")
     strat = _resolve(strategy, algo, cfg)
     if key is None:
         key = experiment_key(cfg)
@@ -501,9 +642,10 @@ def _run_checkpointed(loss_fn, params, store, cfg, rounds, *, strategy,
     orig_hash = ckpt.config_hash(cfg)
 
     ring, ebuf = _zero_buffers(
-        loss_fn, params, store, cfg, momentum, key, fstate, zstate,
-        strategy=strat, round_fn=round_fn, faults=faults, eval_fn=eval_fn,
-        ring_alloc=ring_alloc, n_evals=n_evals)
+        make_round_step(loss_fn, cfg, strategy=strat, round_fn=round_fn,
+                        faults=faults),
+        (params, momentum, key, fstate, zstate), store, eval_fn=eval_fn,
+        params=params, ring_alloc=ring_alloc, n_evals=n_evals)
 
     t, events, cur_lr = 0, [], cfg.lr
     if resume:
@@ -648,7 +790,9 @@ def history(result: ExperimentResult, *, start_round: int = 0) -> list:
     / ``downlink_bytes_total``, ``compression_ratio``, and
     ``wire_bytes_effective`` on rows that report ``m_effective``. They are
     annotations, NOT ring contents — the in-scan metric set (and thus the
-    compiled program and the golden fixtures) is untouched."""
+    compiled program and the golden fixtures) is untouched. Tiered runs
+    additionally carry ``result.staging`` (round -> bucket id / staged
+    bytes), merged into the same rows by the ledger."""
     mets = jax.device_get(result.metrics)
     evals = jax.device_get(result.evals)
     ev_by_round = {int(t): {k: float(v[i]) for k, v in evals.items()}
@@ -672,5 +816,6 @@ def history(result: ExperimentResult, *, start_round: int = 0) -> list:
                    for e in result.events)
         out.sort(key=lambda r: (r["round"], "event" not in r))
     if result.ledger is not None:
-        result.ledger.annotate(out)
+        result.ledger.annotate(out, staging=result.staging,
+                               start_round=start_round)
     return out

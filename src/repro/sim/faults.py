@@ -124,6 +124,30 @@ class FaultModel:
         the experiment carry (and in durable checkpoints)."""
         return jnp.ones((n_clients,), jnp.bool_)
 
+    def advance(self, k_avail, state):
+        """One Gilbert–Elliott transition for ALL N clients: ``state`` [N]
+        bool → next-round availability [N] bool. Pure in (key, state), so
+        the tiered ``CohortStream`` can replay the chain on the HOST with
+        the same ``k_avail`` the in-carry path would draw — bit-identical
+        by construction (pinned by tests/test_tiered.py)."""
+        u = jax.random.uniform(k_avail, state.shape)
+        return jnp.where(state, u >= self.p_fail, u < self.p_recover)
+
+    def _realize(self, k_lat, k_corr, mask) -> "RoundFaults":
+        """Straggler + corruption draws for a cohort whose availability
+        slice ``mask`` [M] is already known — the tail shared by ``step``
+        (in-carry) and ``realize`` (streamed-cohort), so the two paths
+        cannot drift."""
+        m = mask.shape[0]
+        if self.deadline > 0:
+            lat = jax.random.exponential(k_lat, (m,)) * self.straggler_mean
+            mask = mask & (lat <= self.deadline)
+        if self.p_corrupt > 0:
+            corrupt = jax.random.uniform(k_corr, (m,)) < self.p_corrupt
+        else:
+            corrupt = jnp.zeros((m,), jnp.bool_)
+        return RoundFaults(model=self, mask=mask, corrupt=corrupt)
+
     def step(self, key, state, idx) -> tuple:
         """Advance the chain one round and realize this round's faults for
         the sampled cohort ``idx`` ([M] client ids).
@@ -133,19 +157,18 @@ class FaultModel:
         two stay bitwise-identical under faults.
         """
         k_avail, k_lat, k_corr = jax.random.split(key, 3)
-        n = state.shape[0]
-        u = jax.random.uniform(k_avail, (n,))
-        up = jnp.where(state, u >= self.p_fail, u < self.p_recover)
-        m = idx.shape[0]
-        mask = up[idx]
-        if self.deadline > 0:
-            lat = jax.random.exponential(k_lat, (m,)) * self.straggler_mean
-            mask = mask & (lat <= self.deadline)
-        if self.p_corrupt > 0:
-            corrupt = jax.random.uniform(k_corr, (m,)) < self.p_corrupt
-        else:
-            corrupt = jnp.zeros((m,), jnp.bool_)
-        return up, RoundFaults(model=self, mask=mask, corrupt=corrupt)
+        up = self.advance(k_avail, state)
+        return up, self._realize(k_lat, k_corr, up[idx])
+
+    def realize(self, key, avail) -> "RoundFaults":
+        """Realize one round's faults from a PRE-COMPUTED availability
+        slice ``avail`` [M] bool (the tiered path: the [N] chain advanced
+        host-side in the CohortStream replay, ``avail = up[idx]``). Splits
+        the SAME 3-way chain as ``step`` and leaves the availability
+        stream unconsumed, so the straggler/corruption draws are
+        bit-identical to the in-carry derivation."""
+        _, k_lat, k_corr = jax.random.split(key, 3)
+        return self._realize(k_lat, k_corr, avail)
 
     # -- delta scrubbing (shared by every aggregation path) ------------------
     def _poisoned(self, leaf):

@@ -35,13 +35,31 @@ from repro.utils.tree import tree_add
 
 
 def make_sharded_round(loss_fn, cfg: FedZOConfig, mesh: Mesh, *,
-                       axis: str = "clients"):
+                       axis: str = "clients", store=None):
     """Signature-compatible replacement for ``fedzo.round_simulated``
-    (flat/wide cfg only) with the M clients sharded over ``axis``."""
+    (flat/wide cfg only) with the M clients sharded over ``axis``.
+
+    The round consumes only the per-round cohort batches, so it is
+    store-tier agnostic: it runs unchanged under the device-resident
+    engine AND the tiered cohort stream (sim/tiered.py). Passing the
+    deployment's ``store=`` (either tier, or a client list — resolved
+    through ``tiered.resolve_store``) validates the mesh split against
+    the population at deployment time instead of first trace."""
     if not (cfg.flat_params or cfg.batch_directions):
         raise ValueError("the sharded round runs on the flat delta matrix — "
                          "set cfg.flat_params or cfg.batch_directions")
     n_dev = mesh.shape[axis]
+    if store is not None:
+        from repro.sim.tiered import resolve_store
+        store = resolve_store(store, tier="auto")
+        if cfg.n_participating > store.n_clients:
+            raise ValueError(
+                f"cfg.n_participating={cfg.n_participating} exceeds the "
+                f"store's population N={store.n_clients}")
+        if cfg.n_participating % n_dev:
+            raise ValueError(
+                f"n_participating={cfg.n_participating} must divide evenly "
+                f"over the {n_dev}-device '{axis}' mesh axis")
 
     def round_fn(loss_fn_, server_params, client_batches, client_rngs, cfg_,
                  *, channel_rng=None, momentum=None, weights=None,

@@ -42,12 +42,25 @@ class ClientStore(NamedTuple):
         return jax.tree.leaves(self.data)[0].shape[1]
 
 
-def build_store(clients) -> ClientStore:
-    """Stack a list of per-client dataset pytrees (e.g. {"x": [n_i, ...],
-    "y": [n_i]}) into one device-resident ClientStore, zero-padding every
-    client to the largest row count."""
+class CohortBatch(NamedTuple):
+    """One round's staged cohort on the tiered path (sim/tiered.py): the M
+    sampled clients' rows padded to the cohort's bucket capacity, plus
+    their true sizes. In a segment stream every leaf carries an extra
+    leading [S] rounds axis. ``avail`` is the host-replayed availability
+    slice of a fault run (None otherwise — no leaf, so the fault-free jit
+    signature is unchanged)."""
+    data: Any              # pytree, leaves [M, cap, ...]
+    sizes: jnp.ndarray     # [M] int32 true row counts
+    avail: Any = None      # [M] bool fault-chain slice, or None
+
+
+def client_sizes(clients) -> list:
+    """Validated per-client row counts for a list of client dataset
+    pytrees — the shared front door of ``build_store`` and the tiered
+    ``build_host_store`` (leaf row counts must agree within a client,
+    dtypes must agree across clients)."""
     if not clients:
-        raise ValueError("build_store needs at least one client dataset")
+        raise ValueError("need at least one client dataset")
     sizes = []
     for i, c in enumerate(clients):
         ns = {int(np.shape(l)[0]) for l in jax.tree.leaves(c)}
@@ -64,14 +77,33 @@ def build_store(clients) -> ClientStore:
                     f"client {i} leaf {j} has dtype {d} but client 0 has "
                     f"{d0} — stacking would silently cast; make the client "
                     f"datasets dtype-uniform")
+    return sizes
+
+
+def stack_padded(leaves, cap: int) -> np.ndarray:
+    """Stack ragged per-client leaves into ONE preallocated
+    ``[len(leaves), cap, ...]`` zero-padded host buffer. Rows are copied
+    straight into the buffer, so peak host memory is exactly the padded
+    layout (pad bytes = Σ(cap − n_i)·row_bytes) — never a transient list
+    of N individually padded copies."""
+    head = np.asarray(leaves[0])
+    out = np.zeros((len(leaves), cap) + head.shape[1:], head.dtype)
+    for i, l in enumerate(leaves):
+        out[i, :len(l)] = np.asarray(l)
+    return out
+
+
+def build_store(clients) -> ClientStore:
+    """Stack a list of per-client dataset pytrees (e.g. {"x": [n_i, ...],
+    "y": [n_i]}) into one device-resident ClientStore, zero-padding every
+    client to the largest row count. Each leaf is assembled in a single
+    preallocated host buffer and crosses to the device in ONE
+    ``jax.device_put`` (a regression test pins both)."""
+    sizes = client_sizes(clients)
     cap = max(sizes)
 
     def stack(*leaves):
-        out = np.zeros((len(leaves), cap) + np.shape(leaves[0])[1:],
-                       np.asarray(leaves[0]).dtype)
-        for i, l in enumerate(leaves):
-            out[i, :len(l)] = np.asarray(l)
-        return jnp.asarray(out)
+        return jax.device_put(stack_padded(leaves, cap))
 
     return ClientStore(data=jax.tree.map(stack, *clients),
                        sizes=jnp.asarray(sizes, jnp.int32))
@@ -83,17 +115,32 @@ def sample_participants(key, n_clients: int, m: int):
     return jax.random.permutation(key, n_clients)[:m]
 
 
+def sample_cohort_batches(data, sizes, key, h: int, b1: int):
+    """Gather [M, H, b1, ...] stacked minibatches from an ALREADY-GATHERED
+    cohort: ``data`` leaves [M, cap, ...], ``sizes`` [M] true row counts.
+
+    The streamed-cohort twin of ``sample_batches`` and bit-identical to it
+    on the same draw: the per-client key fan-out and randint bound depend
+    only on ``key`` and the client's true size — never on the cohort's
+    padded capacity — so a bucket-padded staged cohort samples the exact
+    rows the full-capacity resident store would (pad rows are unreachable
+    either way)."""
+    keys = jax.random.split(key, sizes.shape[0])
+
+    def one(d, n, k):
+        rows = jax.random.randint(k, (h, b1), 0, n)
+        return jax.tree.map(lambda l: l[rows], d)
+
+    return jax.vmap(one)(data, sizes, keys)
+
+
 def sample_batches(store: ClientStore, idx, key, h: int, b1: int):
     """Gather [M, H, b1, ...] stacked minibatches for the sampled clients.
 
     Per client: (h, b1) row indices uniform with replacement over
     [0, sizes[i]) — the in-jit twin of the host ``sample_local_batches``
-    (same distribution; the PRNG stream necessarily differs).
-    """
-    keys = jax.random.split(key, idx.shape[0])
-
-    def one(i, k):
-        rows = jax.random.randint(k, (h, b1), 0, store.sizes[i])
-        return jax.tree.map(lambda l: l[i][rows], store.data)
-
-    return jax.vmap(one)(idx, keys)
+    (same distribution; the PRNG stream necessarily differs). Delegates to
+    ``sample_cohort_batches`` over the gathered cohort, so the resident
+    and tiered paths share one sampling derivation."""
+    cohort = jax.tree.map(lambda l: l[idx], store.data)
+    return sample_cohort_batches(cohort, store.sizes[idx], key, h, b1)

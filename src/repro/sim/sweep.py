@@ -78,6 +78,10 @@ def run_sweep(loss_fn, params, store: ClientStore, base_cfg: FedZOConfig,
     np.ndarray}, "evals": {name: [n_evals] np.ndarray},
     "eval_rounds": np.ndarray}``.
     """
+    # either store tier plugs in; the vmapped scan closes over a device
+    # store, so a tiered HostStore materializes (bit-identical) here
+    from repro.sim.tiered import resolve_store
+    store = resolve_store(store, tier="resident")
     groups: dict = {}
     for s in scenarios:
         static, dyn = _split(s)
