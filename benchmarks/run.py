@@ -34,6 +34,7 @@ def main() -> None:
               ("round", round_bench.run),
               ("sim", sim_bench.run),
               ("algos", sim_bench.run_algos),
+              ("scenario", sim_bench.run_scenario),
               ("tiered", sim_bench.run_tiered),
               ("workloads", workloads_bench.run),
               ("roofline", roofline_report.run)]

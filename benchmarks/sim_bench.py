@@ -77,10 +77,10 @@ R = 10
 fn = sim.make_experiment_fn(softmax_loss, cfg, R, round_fn=rf, donate=False)
 key = sim.experiment_key(cfg)
 p = softmax_init(None)
-out = fn(p, None, key, None, None, store)
+out = fn(p, None, key, None, None, None, store)
 jax.block_until_ready(out[0])
 t0 = time.perf_counter()
-out = fn(p, None, key, None, None, store)
+out = fn(p, None, key, None, None, None, store)
 jax.block_until_ready(out[0])
 print("US_PER_ROUND", (time.perf_counter() - t0) / R * 1e6)
 """
@@ -124,10 +124,10 @@ def run():
     fn = sim.make_experiment_fn(softmax_loss, fcfg, ROUNDS, donate=False)
     key = sim.experiment_key(fcfg)
     p0 = softmax_init(None)
-    out = fn(p0, None, key, None, None, store)        # compile
+    out = fn(p0, None, key, None, None, None, store)  # compile
     jax.block_until_ready(out[0])
     t0 = time.perf_counter()
-    out = fn(p0, None, key, None, None, store)
+    out = fn(p0, None, key, None, None, None, store)
     jax.block_until_ready(out[0])
     eng_us = (time.perf_counter() - t0) / ROUNDS * 1e6
     rows.append(("sim/engine_us_per_round", eng_us, ROUNDS))
@@ -136,10 +136,10 @@ def run():
     # -- engine scanning the UNCHANGED loop-estimator round -------------------
     r_loop = max(2, ROUNDS // 10)
     fn2 = sim.make_experiment_fn(softmax_loss, cfg, r_loop, donate=False)
-    out = fn2(p0, None, sim.experiment_key(cfg), None, None, store)
+    out = fn2(p0, None, sim.experiment_key(cfg), None, None, None, store)
     jax.block_until_ready(out[0])
     t0 = time.perf_counter()
-    out = fn2(p0, None, sim.experiment_key(cfg), None, None, store)
+    out = fn2(p0, None, sim.experiment_key(cfg), None, None, None, store)
     jax.block_until_ready(out[0])
     rows.append(("sim/engine_loop_est_us_per_round",
                  (time.perf_counter() - t0) / r_loop * 1e6, r_loop))
@@ -151,10 +151,10 @@ def run():
     tap = obs.RoundTap(obs.NullSink(), 1)
     fnt = sim.make_experiment_fn(softmax_loss, fcfg, ROUNDS, donate=False,
                                  tap=tap)
-    out = fnt(p0, None, key, None, None, store)       # compile
+    out = fnt(p0, None, key, None, None, None, store)  # compile
     jax.block_until_ready(out[0])
     t0 = time.perf_counter()
-    out = fnt(p0, None, key, None, None, store)
+    out = fnt(p0, None, key, None, None, None, store)
     jax.block_until_ready(out[0])
     tap_us = (time.perf_counter() - t0) / ROUNDS * 1e6
     rows.append(("sim/engine_tap_us_per_round", tap_us, ROUNDS))
@@ -167,10 +167,10 @@ def run():
     fstate = faults.init_state(store.n_clients)
     fnf = sim.make_experiment_fn(softmax_loss, fcfg, ROUNDS, faults=faults,
                                  donate=False)
-    out = fnf(p0, None, key, fstate, None, store)     # compile
+    out = fnf(p0, None, key, fstate, None, None, store)  # compile
     jax.block_until_ready(out[0])
     t0 = time.perf_counter()
-    out = fnf(p0, None, key, fstate, None, store)
+    out = fnf(p0, None, key, fstate, None, None, store)
     jax.block_until_ready(out[0])
     faults_us = (time.perf_counter() - t0) / ROUNDS * 1e6
     rows.append(("sim/engine_faults_us_per_round", faults_us, ROUNDS))
@@ -224,10 +224,10 @@ def run_algos():
         from repro.core import strategy as strategy_mod
         zstate = strategy_mod.get(acfg.strategy).init_state(p0, acfg,
                                                             store.n_clients)
-        out = fn(p0, None, key, None, zstate, store)      # compile
+        out = fn(p0, None, key, None, None, zstate, store)  # compile
         jax.block_until_ready(out[0])
         t0 = time.perf_counter()
-        out = fn(p0, None, key, None, zstate, store)
+        out = fn(p0, None, key, None, None, zstate, store)
         jax.block_until_ready(out[0])
         us = (time.perf_counter() - t0) / rounds * 1e6
         rows.append((f"algos/{name}_us_per_round", us, rounds))
@@ -236,6 +236,68 @@ def run_algos():
         else:
             rows.append((f"algos/{name}_overhead_vs_fedzo_pct", 0.0,
                          (us / base_us - 1.0) * 100.0))
+    return rows
+
+
+def run_scenario():
+    """Wireless-scenario engine cost (DESIGN.md §16): the correlated-fading
+    chain and energy-gated participation vs the channel-off i.i.d. draw on
+    the quickstart experiment under channel scheduling. Rows (snapshot
+    ``results/BENCH_scenario.json`` via the harness):
+
+    - ``scenario/channel_off_us_per_round`` — i.i.d. per-round draw (the
+      paper's Sec. IV-A baseline) under the fast engine plan.
+    - ``scenario/fading_us_per_round`` / ``_overhead_pct`` — the AR(1)
+      chain (ρ=0.9) carried through the scan.
+    - ``scenario/gated_us_per_round`` / ``_overhead_pct`` — fading plus
+      battery gating with a budget that drains mid-run, and
+      ``scenario/gated_m_effective_mean`` — the mean surviving cohort the
+      drain produces (the row that shows the gate actually bites)."""
+    import dataclasses
+
+    from repro import sim
+    from repro.models.simple import softmax_init, softmax_loss
+
+    rows = []
+    clients, cfg = _quickstart_setup()
+    store = sim.build_store(clients)
+    p0 = softmax_init(None)
+    rounds = max(4, ROUNDS // 2)
+    base = dataclasses.replace(sim.fast_sim_config(cfg),
+                               channel_schedule=True, h_min=0.3)
+
+    def timed(c):
+        from repro.sim import channel as channel_lib
+        fn = sim.make_experiment_fn(softmax_loss, c, rounds, donate=False)
+        key = sim.experiment_key(c)
+        cm = c.channel_model
+        cstate = (cm.init_state(store.n_clients, channel_lib.init_key(key))
+                  if cm is not None else None)
+        out = fn(p0, None, key, None, cstate, None, store)  # compile
+        jax.block_until_ready(out[0])
+        t0 = time.perf_counter()
+        out = fn(p0, None, key, None, cstate, None, store)
+        jax.block_until_ready(out[0])
+        return (time.perf_counter() - t0) / rounds * 1e6, out
+
+    off_us, _ = timed(base)
+    rows.append(("scenario/channel_off_us_per_round", off_us, rounds))
+
+    fad_us, _ = timed(dataclasses.replace(
+        base, channel_model=sim.ChannelModel(rho=0.9)))
+    rows.append(("scenario/fading_us_per_round", fad_us, rounds))
+    rows.append(("scenario/fading_overhead_pct", 0.0,
+                 (fad_us / off_us - 1.0) * 100.0))
+
+    gm = sim.ChannelModel(rho=0.9, battery=float(max(2, rounds // 2)),
+                          tx_cost=1.0)
+    gat_us, out = timed(dataclasses.replace(base, channel_model=gm))
+    ring = out[6]
+    rows.append(("scenario/gated_us_per_round", gat_us, rounds))
+    rows.append(("scenario/gated_overhead_pct", 0.0,
+                 (gat_us / off_us - 1.0) * 100.0))
+    rows.append(("scenario/gated_m_effective_mean", 0.0,
+                 round(float(np.mean(np.asarray(ring["m_effective"]))), 2)))
     return rows
 
 

@@ -75,7 +75,8 @@ def run():
     fcfg = sim.fast_sim_config(cfg)
     fn = sim.make_experiment_fn(loss, fcfg, ROUNDS, donate=False)
     eng_us = _timed_engine(
-        fn, (p0, None, sim.experiment_key(fcfg), None, None, task.store), ROUNDS)
+        fn, (p0, None, sim.experiment_key(fcfg), None, None, None,
+             task.store), ROUNDS)
     rows.append(("workloads/attack_engine_us_per_round", eng_us, ROUNDS))
     rows.append(("workloads/attack_speedup_x", 0.0, host_us / eng_us))
 
@@ -94,7 +95,8 @@ def run():
     hfcfg = sim.fast_sim_config(hcfg)
     hfn = sim.make_experiment_fn(hloss, hfcfg, hr, donate=False)
     ht_us = _timed_engine(
-        hfn, (hp0, None, sim.experiment_key(hfcfg), None, None, ht.store), hr)
+        hfn, (hp0, None, sim.experiment_key(hfcfg), None, None, None,
+              ht.store), hr)
     rows.append(("workloads/hypertune_engine_us_per_round", ht_us, hr))
     rows.append(("workloads/hypertune_speedup_x", 0.0, ht_host_us / ht_us))
     return rows

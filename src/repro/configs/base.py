@@ -173,6 +173,15 @@ class FedZOConfig:
     # round and exclude clients with |h| < h_min from the aggregation (mask
     # into both the mean and Δ_max; m_effective reported per round)
     channel_schedule: bool = False
+    # wireless scenario model (sim/channel.py, DESIGN.md §16): a
+    # ``sim.ChannelModel`` makes the channel a scanned process — per-client
+    # AR(1) time-correlated fading riding the experiment carry (scheduling
+    # draws come from the chain instead of the i.i.d. Rayleigh draw) and
+    # optional per-client energy budgets gating participation. None (the
+    # default) keeps today's i.i.d. draw bit-exactly. Typed Any to avoid an
+    # import cycle; hashable (frozen dataclass), so it sweeps as a static
+    # run_sweep axis.
+    channel_model: object = None
     # FedAvg-style size-weighted aggregation: weight each sampled client's
     # delta by n_i/n (its true row count over the sampled total) instead of
     # the uniform 1/M — realistic for the uneven/label-skew partitions of

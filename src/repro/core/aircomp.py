@@ -170,27 +170,43 @@ def aircomp_aggregate_flat(deltas, rng, *, snr_db, h_min, d=None, mask=None,
     return out, stats
 
 
-def aircomp_simulate_channel(deltas_flat, rng, *, snr_db, h_min):
+def aircomp_simulate_channel(deltas_flat, rng, *, snr_db, h_min, h=None):
     """Explicit complex-channel simulation on flat [M, d] deltas.
 
+    Only the SCHEDULED devices (|h_i| ≥ h_min — Sec. IV-A channel
+    truncation) transmit: a deep-fade device would need α_i = h_min/h_i > 1
+    to invert its channel and blow through the d·P energy budget, so it
+    stays silent and contributes to neither the superposition nor Δ_max.
+    The receiver divides by the scheduled count (clamped, so an all-masked
+    round degenerates to the zero update). ``h`` optionally supplies an
+    externally-realized channel (e.g. a ``sim.ChannelModel`` chain state)
+    instead of the fresh i.i.d. draw.
+
     Returns (y [d] real recovered update, diag dict with per-device transmit
-    energies and the channel draw). Used by tests to validate
-    ``aircomp_aggregate`` and the energy constraint.
+    energies, the channel draw, and the scheduling mask). Used by tests to
+    validate ``aircomp_aggregate`` and the per-device energy constraint.
     """
     M, d = deltas_flat.shape
     sigma_w2 = P_TX / (10.0 ** (snr_db / 10.0))
     k_h, k_n = jax.random.split(rng)
-    h, _ = schedule_by_channel(k_h, M, 0.0)            # all rows transmit here
-    delta_max = jnp.max(jnp.sum(jnp.square(deltas_flat), axis=1))
+    if h is None:
+        h, mask = schedule_by_channel(k_h, M, h_min)
+    else:
+        mask = jnp.abs(h) >= h_min
+    maskf, m_div, m_sched = mask_stats(mask, M)
+    sq = jnp.sum(jnp.square(deltas_flat), axis=1)
+    delta_max = jnp.max(jnp.where(maskf > 0, sq, 0.0))  # scheduled rows only
 
-    alpha = (h_min / h) * jnp.sqrt(d * P_TX / delta_max)          # Eq. 15
+    alpha = maskf * (h_min / h) \
+        * jnp.sqrt(d * P_TX / jnp.maximum(delta_max, 1e-30))      # Eq. 15
     tx = alpha[:, None] * deltas_flat.astype(jnp.complex64)
     energies = jnp.sum(jnp.abs(tx) ** 2, axis=1)                  # ≤ d·P
     kr, ki = jax.random.split(k_n)
     noise = (jax.random.normal(kr, (d,)) + 1j * jax.random.normal(ki, (d,))) \
         * jnp.sqrt(sigma_w2 / 2.0)
     s = jnp.sum(h[:, None] * tx, axis=0) + noise                  # Eq. 14/16
-    rx_scale = jnp.sqrt(delta_max / (d * P_TX * h_min ** 2)) / M
+    rx_scale = jnp.sqrt(delta_max / (d * P_TX * h_min ** 2)) / m_div
     y = jnp.real(rx_scale * s)                                    # Eq. 17
-    return y, {"h": h, "tx_energy": energies, "delta_max": delta_max,
+    return y, {"h": h, "mask": mask, "m_effective": m_sched,
+               "tx_energy": energies, "delta_max": delta_max,
                "energy_budget": d * P_TX}

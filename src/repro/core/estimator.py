@@ -284,7 +284,7 @@ def direction_block(rng, spec: FlatSpec, b2, *, kind="sphere", conv="block",
     [b2] per-direction scale factors (1/‖g_n‖ for sphere, ones otherwise).
 
     The batched-direction ("wide") estimator of the simulation engine
-    (DESIGN.md §9). Two conventions:
+    (DESIGN.md §9). Three conventions:
 
     - conv="block": one PRNG call for the whole block — the fast path. The
       pad columns may carry generator residue; norms are taken over the
@@ -294,10 +294,25 @@ def direction_block(rng, spec: FlatSpec, b2, *, kind="sphere", conv="block",
       ``sample_direction(fold_in(rng, n), ...)`` — the loop estimator's
       directions, used to prove wide-vs-loop trajectory equivalence.
       Requires ``like`` (a params pytree matching ``spec``).
+    - conv="channel": the channel-driven one-point wireless estimator
+      (arXiv 2401.17460) — the direction block is the real baseband
+      projection of CN(0,1) fading randomness, i.e. a unit-variance
+      gaussian block drawn with the channel innovation's key fan-out
+      (``kr`` of ``split(rng)`` drives the in-phase component, exactly
+      like ``sim.channel.ChannelModel._innovation``), so in a deployment
+      the perturbation reuses the randomness the receiver already
+      estimates and costs no direction downlink. Statistically a gaussian
+      estimator: E[vvᵀ] = I, so ``inv`` is ones and the update scale must
+      be the gaussian one (no d-factor, no sphere normalization) whatever
+      ``kind`` says — the wide phase overrides it.
     """
     if kind == "coordinate":
         raise ValueError("batched-direction path does not support "
                          "kind='coordinate'")
+    if conv == "channel":
+        kr, _ki = jax.random.split(rng)
+        V = jax.random.normal(kr, (b2, spec.n_pad), dtype)
+        return V, jnp.ones((b2,), jnp.float32)
     if conv == "tree":
         if like is None:
             raise ValueError("conv='tree' direction blocks need the params "

@@ -24,7 +24,8 @@ def local_phase(loss_fn, params, batches, cfg: FedZOConfig):
 
 
 def round_simulated(loss_fn, server_params, client_batches, cfg: FedZOConfig,
-                    *, channel_rng=None, weights=None, faults=None):
+                    *, channel_rng=None, weights=None, faults=None,
+                    channel=None):
     """One FedAvg round over M clients (batches leading axes [M, H, ...]).
 
     Honors the same channel-truncation scheduling as the FedZO round
@@ -47,7 +48,12 @@ def round_simulated(loss_fn, server_params, client_batches, cfg: FedZOConfig,
     stats = {}
     if cfg.channel_schedule and channel_rng is not None:
         k_sched, noise_rng = jax.random.split(channel_rng)
-        _, mask = schedule_by_channel(k_sched, M, cfg.h_min)
+        if channel is None:
+            _, mask = schedule_by_channel(k_sched, M, cfg.h_min)
+    if channel is not None:
+        # realized wireless scenario (sim/channel.py): correlated-fading
+        # scheduling ∧ battery gating replaces the i.i.d. draw
+        mask = channel.mask
     if faults is not None:
         deltas, fmask = faults.apply_tree(deltas)
         mask = fmask if mask is None else mask & fmask
@@ -60,7 +66,9 @@ def round_simulated(loss_fn, server_params, client_batches, cfg: FedZOConfig,
         agg = jax.tree.map(
             lambda x: (jnp.einsum("m...,m->...", x.astype(jnp.float32),
                                   maskf) / m_div).astype(x.dtype), deltas)
-        stats = {"m_effective": m_sched} if mask is not None else {}
+        # unconditional: weighted-but-unscheduled rounds must report the
+        # same cohort-size column as every other aggregation path
+        stats = {"m_effective": m_sched}
     else:
         agg = tree_scale(1.0 / M,
                          jax.tree.map(lambda x: jnp.sum(x, 0), deltas))

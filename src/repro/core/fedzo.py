@@ -131,10 +131,11 @@ def _flat_phase_scan(loss_fn, buf0, spec, br, keys, batches, cfg):
 
 
 def _check_surrogate(cfg: FedZOConfig):
-    if cfg.direction_conv == "surrogate" and not cfg.batch_directions:
+    if cfg.direction_conv in ("surrogate", "channel") \
+            and not cfg.batch_directions:
         raise ValueError(
-            "direction_conv='surrogate' runs on the batched-direction "
-            "(wide) local phase — set cfg.batch_directions=True")
+            f"direction_conv={cfg.direction_conv!r} runs on the batched-"
+            f"direction (wide) local phase — set cfg.batch_directions=True")
 
 
 def surrogate_queries(cfg: FedZOConfig) -> int:
@@ -197,13 +198,21 @@ def _wide_phase_scan(loss_fn, buf0, spec, keys, batches, cfg, like=None):
     them), and the update as one matvec. Statistically identical to the
     loop estimator; walks its exact directions when direction_conv="tree".
     direction_conv="surrogate" swaps in the trajectory-informed surrogate
-    phase (fewer fresh queries, EW-blended update direction).
+    phase (fewer fresh queries, EW-blended update direction);
+    direction_conv="channel" perturbs along channel-driven gaussian
+    directions (the one-point wireless estimator, arXiv 2401.17460).
     Returns (final buf, coeffs [H, b2], losses [H])."""
     if cfg.direction_conv == "surrogate":
         return _surrogate_phase_scan(loss_fn, buf0, spec, keys, batches, cfg)
     mu = jnp.float32(cfg.mu)
-    scale = estimator._scale_factor(spec.d, cfg.estimator)
-    conv = "tree" if cfg.direction_conv == "tree" else "block"
+    conv = (cfg.direction_conv if cfg.direction_conv in ("tree", "channel")
+            else "block")
+    # the channel-driven one-point estimator (arXiv 2401.17460) perturbs
+    # along raw fading-projection gaussians — gaussian statistics
+    # (E[vvᵀ] = I) whatever cfg.estimator says, so the unbiasedness factor
+    # is 1, not d (estimator.direction_block documents the convention)
+    scale = (1.0 if conv == "channel"
+             else estimator._scale_factor(spec.d, cfg.estimator))
 
     def step(buf, inp):
         k, batch = inp
@@ -268,8 +277,8 @@ def client_delta(loss_fn, params, batches, rng, cfg) -> tuple:
 
 def round_simulated(loss_fn, server_params, client_batches, client_rngs,
                     cfg: FedZOConfig, *, channel_rng=None, momentum=None,
-                    weights=None, faults=None, cstate=None, loss_wrap=None,
-                    state_fn=None):
+                    weights=None, faults=None, channel=None, cstate=None,
+                    loss_wrap=None, state_fn=None):
     """One full communication round over the M sampled clients (vmapped).
 
     client_batches: pytree with leading [M, H, ...] axes.
@@ -301,6 +310,14 @@ def round_simulated(loss_fn, server_params, client_batches, client_rngs,
     mask, so dropped/straggling/poisoned clients are excluded from the
     mean and Δ_max exactly like channel-masked ones (DESIGN.md §12).
 
+    ``channel`` (a ``sim.channel.RoundChannel``) supplies this round's
+    realized wireless scenario (DESIGN.md §16): its transmit mask —
+    time-correlated-fading scheduling ∧ battery gating, advanced by the
+    engine's ``ChannelModel`` carry step — REPLACES the i.i.d.
+    ``schedule_by_channel`` draw, composing with faults and weights
+    through the same ``mask_stats`` convention. ``channel=None`` keeps
+    the per-round i.i.d. draw bit-exactly.
+
     Strategy hooks (core/strategy.py, DESIGN.md §13) — all default None,
     in which case every code path above is byte-for-byte the plain FedZO
     round:
@@ -327,7 +344,12 @@ def round_simulated(loss_fn, server_params, client_batches, client_rngs,
     air_stats = {}
     if cfg.channel_schedule and channel_rng is not None:
         k_sched, noise_rng = jax.random.split(channel_rng)
-        _, mask = schedule_by_channel(k_sched, M, cfg.h_min)
+        if channel is None:
+            _, mask = schedule_by_channel(k_sched, M, cfg.h_min)
+    if channel is not None:
+        # the scenario engine realized this round's channel already:
+        # correlated-fading scheduling ∧ battery gating (sim/channel.py)
+        mask = channel.mask
 
     if cfg.flat_params or cfg.batch_directions:
         spec, br = (_wide_setup(server_params, cfg) if cfg.batch_directions
@@ -366,7 +388,10 @@ def round_simulated(loss_fn, server_params, client_batches, client_rngs,
         elif mask is not None or weights is not None:
             maskf, m_div, m_sched = mask_stats(mask, M, weights)
             agg_flat = jnp.einsum("mn,m->n", deltas, maskf) / m_div
-            air_stats = {"m_effective": m_sched} if mask is not None else {}
+            # m_effective reports unconditionally: a weighted-but-
+            # unscheduled round must carry the same cohort-size column as
+            # every other aggregation path (history/CSV consistency)
+            air_stats = {"m_effective": m_sched}
         else:
             agg_flat = jnp.mean(deltas, axis=0)
         agg = unflatten(agg_flat, spec)
@@ -399,7 +424,7 @@ def round_simulated(loss_fn, server_params, client_batches, client_rngs,
                 lambda x: (jnp.einsum("m...,m->...", x.astype(jnp.float32),
                                       maskf) / m_div).astype(x.dtype),
                 deltas)
-            air_stats = {"m_effective": m_sched} if mask is not None else {}
+            air_stats = {"m_effective": m_sched}  # see flat-path comment
         else:
             agg = tree_scale(1.0 / M,
                              jax.tree.map(lambda x: jnp.sum(x, 0), deltas))

@@ -71,6 +71,11 @@ class FedServer:
             raise ValueError("fault injection runs inside the jitted round "
                              "step — construct the FedServer with a "
                              "store=ClientStore")
+        if self.cfg.channel_model is not None and self.store is None:
+            raise ValueError("cfg.channel_model (the correlated wireless "
+                             "scenario) advances inside the jitted round "
+                             "step — construct the FedServer with a "
+                             "store=ClientStore")
         n = (len(self.clients) if self.clients is not None
              else self.store.n_clients)
         if n != self.cfg.n_devices:
@@ -117,12 +122,22 @@ class FedServer:
         # SAME deterministic ledger columns, so the two drivers stay
         # row-identical (the lr never enters the byte model, so rollback
         # config swaps don't invalidate it)
-        self._ledger = CommsLedger.from_run(self.cfg, self.params)
+        self._ledger = CommsLedger.from_run(self.cfg, self.params,
+                                            channel=self.cfg.channel_model)
         if self.store is not None:
             from repro.sim import engine as sim_engine
             self._key = sim_engine.experiment_key(self.cfg)
         else:
             self._key = jax.random.key(self.cfg.seed)
+        # wireless-scenario carry, initialized off the fold-in key exactly
+        # like run_experiment (the round chain is never consumed) so the
+        # host-driven and scanned trajectories share one realization
+        cm = self.cfg.channel_model
+        if cm is not None:
+            from repro.sim import channel as channel_lib
+            self._cstate = cm.init_state(n, channel_lib.init_key(self._key))
+        else:
+            self._cstate = None
         self._build_round_fns()
 
     def _build_round_fns(self):
@@ -176,9 +191,9 @@ class FedServer:
         if self.store is not None:
             state, metrics = self._sim_step(
                 (self.params, self._momentum, self._key, self._fstate,
-                 self._zstate), self.store)
+                 self._cstate, self._zstate), self.store)
             (self.params, self._momentum, self._key, self._fstate,
-             self._zstate) = state
+             self._cstate, self._zstate) = state
         else:
             chosen = self.sample_clients()
             batches = self._stack_batches(chosen)
@@ -224,7 +239,7 @@ class FedServer:
             t = self._round_idx
         while True:
             snap = (self.params, self._momentum, self._key, self._fstate,
-                    self._zstate)
+                    self._cstate, self._zstate)
             t_start = time.perf_counter()
             metrics = self._step_once()
             metrics["round"] = t
@@ -245,7 +260,7 @@ class FedServer:
                 metrics["round_ms"] = (time.perf_counter() - t_start) * 1e3
                 break
             (self.params, self._momentum, self._key, self._fstate,
-             self._zstate) = snap
+             self._cstate, self._zstate) = snap
             self._retries += 1
             if self._retries > self.max_retries:
                 raise DivergenceError(t, self.max_retries, self.cfg.lr)
@@ -296,7 +311,7 @@ class FedServer:
                 faults=self.faults, donate=False)
             self._exp_cache[rounds] = fn
         args = (self.params, self._momentum, self._key, self._fstate,
-                self._zstate, self.store)
+                self._cstate, self._zstate, self.store)
         if self.tracer is not None:
             from repro.checkpoint.checkpoint import config_hash
             run = self.tracer.timed_compile(
@@ -306,14 +321,15 @@ class FedServer:
                 out = jax.block_until_ready(run(*args))
         else:
             out = fn(*args)
-        (self.params, self._momentum, self._key, self._fstate, self._zstate,
-         ring, ebuf) = out
+        (self.params, self._momentum, self._key, self._fstate, self._cstate,
+         self._zstate, ring, ebuf) = out
         res = sim_engine.ExperimentResult(
             params=self.params, momentum=self._momentum, key=self._key,
             metrics=ring, evals=ebuf, rounds=rounds, ring_size=rounds,
             eval_rounds=(np.arange(0, rounds, self.eval_every)
                          if self.jit_eval is not None else np.arange(0)),
-            fault_state=self._fstate, strategy=self._strategy.name,
+            fault_state=self._fstate, channel_state=self._cstate,
+            strategy=self._strategy.name,
             strategy_state=self._zstate, ledger=self._ledger)
         if self.divergence_guard and self._diverged(
                 {k: float(v[-1]) for k, v in

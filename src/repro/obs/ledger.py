@@ -49,13 +49,20 @@ class CommsLedger:
     downlink_client_bytes: int   # per-client model broadcast
     dense_client_bytes: int      # dense-delta baseline per client
     mode: str = "dense"          # dense | seed | aircomp
+    # per-transmission energy debit under the wireless scenario model
+    # (sim/channel.py — the normalized Eq.-15 budget a device provisions);
+    # 0.0 = no energy accounting, rows get no energy columns
+    tx_energy_client: float = 0.0
 
     @classmethod
-    def from_run(cls, cfg, params, m: int = None) -> "CommsLedger":
+    def from_run(cls, cfg, params, m: int = None,
+                 channel=None) -> "CommsLedger":
         """Build the ledger for a run: ``params`` fixes the dense byte
         count (dtype-exact leaf nbytes), ``cfg`` the wire format and the
         seed-compression geometry (H·b2 coefficients + the 8-byte threefry
-        key + the 4-byte lr — exactly ``seedcomm.wire_bytes``)."""
+        key + the 4-byte lr — exactly ``seedcomm.wire_bytes``).
+        ``channel`` (a ``sim.ChannelModel``) adds per-transmission energy
+        accounting when its gating is active."""
         from repro.core import seedcomm
 
         dense = tree_bytes(params)
@@ -64,10 +71,13 @@ class CommsLedger:
             up = seedcomm.wire_bytes_model(cfg)
         else:
             up = dense
+        tx = (float(channel.tx_cost)
+              if channel is not None and channel.gated else 0.0)
         return cls(m=int(m if m is not None else cfg.n_participating),
                    uplink_client_bytes=int(up),
                    downlink_client_bytes=int(dense),
-                   dense_client_bytes=int(dense), mode=mode)
+                   dense_client_bytes=int(dense), mode=mode,
+                   tx_energy_client=tx)
 
     # -- per-round figures ---------------------------------------------------
     def round_uplink_bytes(self) -> int:
@@ -122,6 +132,12 @@ class CommsLedger:
             if "m_effective" in row:
                 row["wire_bytes_effective"] = int(
                     row["m_effective"] * self.uplink_client_bytes)
+                if self.tx_energy_client > 0.0:
+                    # energy actually spent this round: only transmitting
+                    # (scheduled ∧ charged) clients pay the Eq.-15 budget —
+                    # deterministic in the row like every ledger column
+                    row["energy_spent"] = float(
+                        row["m_effective"] * self.tx_energy_client)
             if staging is not None:
                 srow = staging.get(t - start_round)
                 if srow:

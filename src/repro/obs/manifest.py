@@ -5,8 +5,9 @@ found on disk months later: the config and its hash (the SAME
 ``checkpoint.config_hash`` the snapshot sidecars record, so a manifest and
 a checkpoint from one run cross-check), the strategy name, the jax/python
 versions, the git sha of the working tree, the device/mesh topology, the
-communication ledger, the fault-model configuration, and the structured
-event stream (divergence rollbacks) the run produced.
+communication ledger, the fault-model and wireless-scenario
+configurations, and the structured event stream (divergence rollbacks)
+the run produced.
 
 ``sim.run_experiment`` emits one alongside durable checkpoints
 (``<checkpoint_dir>/manifest.json``) and next to a file-backed metric sink
@@ -53,7 +54,7 @@ def device_topology() -> dict:
 def build_manifest(cfg=None, *, strategy: Optional[str] = None,
                    rounds: Optional[int] = None,
                    n_clients: Optional[int] = None, ledger=None,
-                   faults=None, events=None, mesh=None,
+                   faults=None, channel=None, events=None, mesh=None,
                    extra: Optional[dict] = None) -> dict:
     """Assemble a run manifest dict. Everything is optional so partial
     emitters (benchmarks) reuse the same provenance block."""
@@ -79,6 +80,8 @@ def build_manifest(cfg=None, *, strategy: Optional[str] = None,
         md["comms"] = ledger.manifest()
     if faults is not None:
         md["faults"] = faults.describe()
+    if channel is not None:
+        md["channel"] = channel.describe()
     if mesh is not None:
         md["mesh"] = {"axes": dict(zip(mesh.axis_names, mesh.devices.shape)),
                       "devices": [str(d) for d in mesh.devices.ravel()]}

@@ -8,6 +8,8 @@
 - ``sweep``  — vmapped scenario grids (one jit per static shape group).
 - ``faults`` — in-jit fault injection (availability chains, stragglers,
   corrupted uploads) + the server-side finite-guard (DESIGN.md §12).
+- ``channel`` — the wireless scenario as a scanned process: time-correlated
+  AR(1) flat fading and energy-gated participation (DESIGN.md §16).
 - ``tiered`` — host-resident bucketed populations behind a cohort stream:
   only the sampled cohort (+ one prefetch buffer) touches the device,
   bitwise-identical to the resident engine (DESIGN.md §15).
@@ -21,6 +23,7 @@ from repro.sim.engine import (ExperimentResult, experiment_key,
                               history, make_cohort_round_step,
                               make_experiment_fn, make_round_step,
                               run_experiment, stream_core)
+from repro.sim.channel import ChannelModel, RoundChannel
 from repro.sim.faults import DivergenceError, FaultModel, RoundFaults
 from repro.sim.shard import make_clients_mesh, make_sharded_round
 from repro.sim.store import (ClientStore, CohortBatch, build_store,

@@ -1,0 +1,283 @@
+"""Wireless scenario engine: the channel as a scanned process (DESIGN.md §16).
+
+The paper's AirComp story (Sec. IV) draws one i.i.d. Rayleigh channel per
+round (``aircomp.schedule_by_channel``). Real devices move: fading is
+time-correlated, and a device's energy budget — not just its instantaneous
+channel — decides whether it can transmit. ``ChannelModel`` makes both
+first-class citizens of the compiled round, mirroring the ``FaultModel``
+carry-state contract (DESIGN.md §12):
+
+- **Time-correlated flat fading** — each of the N clients carries a complex
+  Gauss–Markov (AR(1)) chain through the experiment carry:
+
+      h' = ρ·h + sqrt(1 − ρ²)·w,      w ~ CN(0, 1)
+
+  with ρ from a Doppler/mobility knob (``from_doppler``). ρ = 0 reduces
+  BIT-EXACTLY to the i.i.d. per-round draw (the advance returns the fresh
+  innovation itself), and the stationary law is CN(0, 1) for every ρ — the
+  Rayleigh scheduling rate exp(−h_min²) is preserved, only the
+  round-to-round correlation changes.
+- **Energy-gated participation** (arXiv 2409.16456) — each client carries a
+  battery [N], debited by the Eq.-15 transmit budget (``tx_cost``, the
+  normalized d·P a device provisions for the worst-case α·Δ_max
+  transmission) every round it actually transmits. A drained client is
+  masked out through the shared ``aircomp.mask_stats`` convention, exactly
+  like a deep-fade or faulted one, and ``m_effective`` reports the
+  surviving cohort. The debit is the *budget*, not the realized per-round
+  energy: participation gating must be decidable before the round runs —
+  which is also what makes the chain host-replayable.
+
+The whole per-round transition (``step``) is a pure function of
+(key, state, idx) and the static config, with NO dependence on the round's
+deltas — so the tiered ``CohortStream`` (DESIGN.md §15) replays the chain
+on the host, arbitrarily ahead of the device, bit-identically to the
+in-carry derivation. The per-round key is a dedicated stream of the round
+key chain (``sim.engine.round_keys``; after the fault key when faults run);
+a ``channel_model=None`` run keeps the original splits, so existing
+trajectories and the golden fixtures are untouched.
+
+Why the chain state is INTEGER fixed-point
+------------------------------------------
+The host replay runs the transition eagerly; the resident engine compiles
+the same transition into a scan body. XLA does not compile float
+arithmetic identically across those contexts: jit rewrites ``x / const``
+into ``x * (1/const)``, fuses ``a·x + b·y`` into FMAs (one rounding
+instead of two), and will even DUPLICATE a producer feeding both the scan
+carry and an emitted output, contracting each copy differently —
+``lax.optimization_barrier`` fences code motion, not duplication, so no
+float formulation of the update is robustly bit-stable (we tried; the
+carry lanes and the emitted lanes of the same logical tensor came back
+different). Integer ops have no rounding, so the chain carries int32
+fixed-point state and bitwise identity across every compilation context is
+structural:
+
+- fading ``h``: int32 [N, 2] in Q.14 per component (re, im), clipped to
+  |h| < 16 (a ≥22σ event under the stationary law — the clip is an
+  overflow guard, not a statistical truncation);
+- AR(1) coefficients in Q.12: ``ρ_q = round(ρ·2^12)`` and
+  ``σ_q = round(sqrt(2^24 − ρ_q²))``, so the stationary variance is 1 to
+  within ~2^-12 of quantization;
+- the CN(0, 1) innovation is a 24-term Irwin–Hall sum of raw PRNG bits
+  per component (variance exactly 1/2 per component after the power-of-two
+  shift; max CDF error vs the true Gaussian ~1e-3 — far below what any
+  scheduling-rate statistic resolves);
+- battery in Q.16 energy units; debits are integer subtractions;
+- the |h| ≥ h_min truncation compares the EXACT integer magnitude
+  ``re² + im²`` (Q.20) against ``round(h_min²·2^20)`` — ``h_min`` may be a
+  traced sweep axis, and the float→threshold conversion uses only
+  exactly-specified ops (mul, round, convert).
+
+Floats only appear in derived per-round values (``RoundChannel.h`` as
+complex64 for consumers/telemetry), produced by an int→f32 convert (exact
+below 2^24) and a power-of-two scale (exact) — no rounding anywhere, in
+any context. tests/test_channel.py pins eager ≡ in-scan bit-equality of
+the full chain.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# salt for the chain's round-0 state: folded into the experiment key so the
+# init draw never consumes the per-round key chain (channel-off runs keep
+# their exact key usage)
+INIT_SALT = 0x6368  # "ch"
+
+_FRAC_H = 14        # fading component fixed point: Q.14
+_FRAC_C = 12        # AR(1) coefficient fixed point: Q.12
+_FRAC_B = 16        # battery fixed point: Q.16
+_FRAC_M = 20        # |h|² magnitude fixed point for the h_min compare
+_CLT_DRAWS = 24     # Irwin–Hall terms per component (variance 1/2 exactly)
+_H_CLIP = (1 << (_FRAC_H + 4)) - 1   # |h| < 16: int32 overflow guard
+
+
+def init_key(key):
+    """The channel chain's round-0 key, derived off the experiment key
+    WITHOUT consuming the round key chain."""
+    return jax.random.fold_in(key, INIT_SALT)
+
+
+def fading(state):
+    """The chain's [N] complex64 fading from its integer carry state."""
+    return _to_complex(state[0])
+
+
+def battery(state):
+    """The chain's [N] float32 battery levels from its integer carry."""
+    return state[1].astype(jnp.float32) * jnp.float32(2.0 ** -_FRAC_B)
+
+
+def _to_complex(h_q):
+    """Q.14 int32 [..., 2] → complex64. Exact in every context: the
+    convert is exact below 2^24 and the scale is a power of two."""
+    f = h_q.astype(jnp.float32) * jnp.float32(2.0 ** -_FRAC_H)
+    return jax.lax.complex(f[..., 0], f[..., 1])
+
+
+@dataclass(frozen=True)
+class ChannelModel:
+    """Static wireless-scenario configuration (hashable — safe to close
+    over in jitted programs and to use as a ``run_sweep`` static axis).
+
+    ``rho`` is the AR(1) fading correlation (0 ⇒ i.i.d. per round, → 1 ⇒
+    frozen channel; quantized internally to Q.12 — ``describe()`` reports
+    the effective value). ``battery`` > 0 enables energy gating with that
+    initial per-client budget; ``tx_cost`` is the energy debited per
+    transmission (the normalized Eq.-15 budget d·P). ``battery`` ≤ 0
+    disables gating (infinite energy)."""
+    rho: float = 0.0
+    battery: float = 0.0
+    tx_cost: float = 1.0
+
+    def __post_init__(self):
+        if not 0.0 <= self.rho < 1.0:
+            raise ValueError(f"rho={self.rho} must be in [0, 1)")
+        if self.tx_cost <= 0.0:
+            raise ValueError(f"tx_cost={self.tx_cost} must be positive")
+        if self.battery >= 30000.0 or self.tx_cost >= 30000.0:
+            raise ValueError("battery/tx_cost must stay below 30000 "
+                             "(Q.16 int32 energy accounting)")
+
+    @classmethod
+    def from_doppler(cls, fd_T: float, **kw) -> "ChannelModel":
+        """Build from a normalized Doppler spread fd·T (Doppler frequency ×
+        round duration) under the exponential-correlation mobility model
+        ρ = exp(−2π·fd·T): a static device (fd_T=0) keeps its channel, a
+        fast-moving one (fd_T ≳ 0.5) decorrelates to i.i.d."""
+        if fd_T < 0:
+            raise ValueError(f"fd_T={fd_T} must be >= 0")
+        return cls(rho=math.exp(-2.0 * math.pi * fd_T), **kw)
+
+    @property
+    def gated(self) -> bool:
+        """Whether energy gating is active."""
+        return self.battery > 0.0
+
+    @property
+    def coherence_rounds(self) -> float:
+        """Rounds until the fading autocorrelation decays to 1/e."""
+        return math.inf if self.rho >= 1.0 else (
+            0.0 if self.rho == 0.0 else -1.0 / math.log(self.rho))
+
+    def _coeffs(self) -> tuple:
+        """(ρ_q, σ_q) in Q.12, with σ derived from the QUANTIZED ρ so the
+        stationary variance stays 1 to within quantization."""
+        rho_q = min(int(round(self.rho * (1 << _FRAC_C))), (1 << _FRAC_C) - 1)
+        sigma_q = int(round(math.sqrt((1 << (2 * _FRAC_C)) - rho_q ** 2)))
+        return rho_q, sigma_q
+
+    def describe(self) -> dict:
+        """The scenario configuration as a plain-JSON manifest block
+        (obs/manifest.py), with the derived coherence time, the effective
+        (Q.12-quantized) ρ, and the gating flag so a manifest reader sees
+        the mobility regime at a glance."""
+        d = dataclasses.asdict(self)
+        d["rho_effective"] = self._coeffs()[0] / (1 << _FRAC_C)
+        d["coherence_rounds"] = self.coherence_rounds
+        d["energy_gated"] = self.gated
+        return d
+
+    # -- carry state ---------------------------------------------------------
+    def init_state(self, n_clients: int, key) -> tuple:
+        """Round-0 chain state ``(h [N, 2] int32 Q.14, battery [N] int32
+        Q.16)``.
+
+        ``h`` starts in the AR(1) stationary law CN(0, 1) — the same
+        distribution as the i.i.d. per-round channel, so round statistics
+        don't depend on ρ. ``key`` should be ``init_key(experiment_key)``
+        so the chain never perturbs the round key chain. The state lives in
+        the experiment carry (and in durable checkpoints); on the tiered
+        path it stays host-resident."""
+        h0 = self._innovation(key, n_clients)
+        batt = jnp.full((n_clients,),
+                        int(round(max(self.battery, 0.0) * (1 << _FRAC_B))),
+                        jnp.int32)
+        return h0, batt
+
+    def _innovation(self, key, n: int):
+        """One CN(0, 1) draw as int32 [n, 2] Q.14, from integer ops only.
+
+        Per component: sum 24 uniform 22-bit words (Irwin–Hall — variance
+        24·2^44/12 = 2·(2^22)² in Q.22), then an arithmetic shift to Q.14
+        halves the variance to exactly (2^14)²/2, i.e. CN(0, 1) overall.
+        No float op ever runs, so the draw is bit-identical in every
+        compilation context."""
+        u = jax.random.bits(key, (n, 2, _CLT_DRAWS), jnp.uint32)
+        s = jnp.sum((u >> 10).astype(jnp.int32), axis=-1)
+        s = s - jnp.int32(_CLT_DRAWS // 2 * (1 << 22))
+        return (s + 256) >> 9
+
+    def advance(self, key, h):
+        """One AR(1) fading transition for ALL N clients. Pure in
+        (key, h). ρ=0 returns the fresh draw ITSELF (the i.i.d. channel,
+        bit-exactly, by construction); ρ>0 runs the Q.12×Q.14 integer
+        mul-add — products stay below 2^31 (|h| clipped to <16), the shift
+        back to Q.14 rounds half-up, and the result is clipped to the
+        overflow guard."""
+        w = self._innovation(key, h.shape[0])
+        if self.rho == 0.0:
+            return w
+        rho_q, sigma_q = self._coeffs()
+        nxt = (rho_q * h + sigma_q * w + (1 << (_FRAC_C - 1))) >> _FRAC_C
+        return jnp.clip(nxt, -_H_CLIP, _H_CLIP)
+
+    def step(self, key, state, idx, *, h_min: float,
+             schedule: bool) -> tuple:
+        """Advance the chain one round and realize the round's channel for
+        the sampled cohort ``idx`` ([M] client ids).
+
+        Returns ``(new_state, RoundChannel)``. The round sees the
+        POST-advance fading (the channel during this round's uplink); a
+        sampled client transmits iff it is scheduled (``schedule`` ⇒
+        |h| ≥ h_min — the Sec. IV-A truncation, decided on the model's own
+        correlated draw) AND its battery covers ``tx_cost``; transmitting
+        clients are debited. Pure in (key, state, idx) and the static
+        arguments — NO delta dependence — so the tiered host replay is
+        bit-identical by construction (pinned by tests/test_channel.py).
+        ``h_min``/``schedule`` come from the experiment config (the single
+        source of truth shared with the Eq.-17 noise scale)."""
+        h, batt = state
+        h = self.advance(key, h)
+        h_coh = h[idx]
+        mask = jnp.ones(idx.shape, jnp.bool_)
+        if schedule:
+            # |h|² ≥ h_min² on EXACT integer magnitudes: components to
+            # Q.10 (squares and their sum stay below 2^31), threshold from
+            # the (possibly traced — dynamic sweep axis) h_min via
+            # exactly-specified ops only
+            r = h_coh >> (_FRAC_H - 10)
+            mag = r[..., 0] * r[..., 0] + r[..., 1] * r[..., 1]
+            h2 = jnp.square(jnp.asarray(h_min, jnp.float32))
+            thresh = jnp.int32(jnp.round(h2 * jnp.float32(1 << _FRAC_M)))
+            mask = mag >= thresh
+        if self.gated:
+            cost = jnp.int32(int(round(self.tx_cost * (1 << _FRAC_B))))
+            mask = mask & (batt[idx] >= cost)
+            # idx is a permutation prefix (unique ids), so the scatter-add
+            # debits each transmitting client exactly once
+            batt = batt.at[idx].add(jnp.where(mask, -cost, 0))
+        return (h, batt), RoundChannel(model=self, h=_to_complex(h_coh),
+                                       mask=mask)
+
+    def replace(self, **kw) -> "ChannelModel":
+        return dataclasses.replace(self, **kw)
+
+
+class RoundChannel(NamedTuple):
+    """One round's realized channel for the M sampled clients, handed to
+    the round functions by ``sim.engine.make_round_step``. ``model``
+    carries the static scenario parameters; ``h``/``mask`` are traced [M]
+    arrays (the post-advance cohort fading and the transmit mask —
+    scheduling ∧ battery)."""
+    model: ChannelModel
+    h: jnp.ndarray         # [M] complex64 cohort fading this round
+    mask: jnp.ndarray      # [M] bool — client transmits this round
+
+    @property
+    def m_transmitting(self):
+        return jnp.sum(self.mask.astype(jnp.float32))

@@ -19,8 +19,11 @@ local minibatches, ``k_zo`` the M per-client ZO keys, ``k_chan`` the
 channel realization. The chain starts at ``key(cfg.seed, impl=
 cfg.prng_impl)`` so a whole experiment is bit-reproducible from the config.
 With a ``FaultModel`` attached the split widens to 6 and the extra
-``k_fault`` stream drives the availability/straggler/corruption draws —
-fault-free runs keep the exact 5-way chain, so existing trajectories (and
+``k_fault`` stream drives the availability/straggler/corruption draws; a
+``cfg.channel_model`` (sim/channel.py) widens it once more and the last
+stream ``k_chanm`` advances the wireless-scenario chain (``split_round_
+keys`` is the single source of truth). Runs without the optional
+processes keep their exact narrower chains, so existing trajectories (and
 the golden fixtures) are untouched. Strategies draw nothing of their own:
 their state updates are deterministic functions of the round, so switching
 strategy never perturbs the chain.
@@ -70,6 +73,8 @@ from repro.core.strategy import _static_positive  # noqa: F401  (re-export)
 from repro.obs import manifest as obs_manifest
 from repro.obs.ledger import CommsLedger
 from repro.obs.taps import RoundTap
+from repro.sim import channel as channel_lib
+from repro.sim.channel import RoundChannel
 from repro.sim.faults import DivergenceError, FaultModel
 from repro.sim.store import (ClientStore, CohortBatch, sample_batches,
                              sample_cohort_batches, sample_participants)
@@ -80,6 +85,25 @@ def round_keys(key):
     """(next_carry_key, k_participation, k_batches, k_zo, k_channel)."""
     ks = jax.random.split(key, 5)
     return ks[0], ks[1], ks[2], ks[3], ks[4]
+
+
+def split_round_keys(key, *, faults: bool = False, channel: bool = False):
+    """The per-round key split, widened by the optional extra processes:
+    ``(key', k_part, k_batch, k_zo, k_chan, k_fault, k_chanm)`` with
+    ``k_fault`` / ``k_chanm`` None when faults / the channel model are off.
+
+    THE single source of truth for the widening order (fault stream first,
+    channel-chain stream last), shared by the resident step, the cohort
+    step, and the tiered ``CohortStream``'s host replay. A run without the
+    optional processes keeps the exact narrower split — base runs the
+    5-way ``round_keys`` chain, faults-only runs the historical 6-way one —
+    so attaching a ``ChannelModel`` to a config never perturbs existing
+    trajectories (the golden fixtures pin this)."""
+    n = 5 + int(faults) + int(channel)
+    ks = jax.random.split(key, n)
+    k_fault = ks[5] if faults else None
+    k_chanm = ks[5 + int(faults)] if channel else None
+    return ks[0], ks[1], ks[2], ks[3], ks[4], k_fault, k_chanm
 
 
 def experiment_key(cfg: FedZOConfig):
@@ -96,8 +120,8 @@ def make_round_step(loss_fn, cfg: FedZOConfig, *, algo: Optional[str] = None,
                     strategy=None, round_fn=None,
                     faults: Optional[FaultModel] = None) -> Callable:
     """One full communication round as a pure function
-    ``step((params, momentum, key, fstate, zstate), store) ->
-    ((params', momentum', key', fstate', zstate'), metrics)``.
+    ``step((params, momentum, key, fstate, cstate, zstate), store) ->
+    ((params', momentum', key', fstate', cstate', zstate'), metrics)``.
 
     THE round unit shared by the scan engine and by
     ``FedServer.run_round`` on the store path — sharing it is what makes
@@ -108,9 +132,12 @@ def make_round_step(loss_fn, cfg: FedZOConfig, *, algo: Optional[str] = None,
     ``round_fn`` optionally replaces ``fedzo.round_simulated`` with a
     signature-compatible deployment (the clients-axis shard_map round of
     sim/shard.py) — only for strategies without hooks. ``fstate`` is the
-    fault carry (the [N] Gilbert–Elliott availability states), ``zstate``
-    the strategy carry ({"client": [N, ...], "server": ...} pytree for the
-    stateful strategies); both None when unused.
+    fault carry (the [N] Gilbert–Elliott availability states), ``cstate``
+    the wireless-scenario carry of ``cfg.channel_model`` (the [N] AR(1)
+    fading chain + [N] batteries, sim/channel.py — its ``step`` realizes
+    the round's ``RoundChannel`` and the transmit mask), ``zstate`` the
+    strategy carry ({"client": [N, ...], "server": ...} pytree for the
+    stateful strategies); all None when unused.
     """
     strat = _resolve(strategy, algo, cfg)
     strat.validate(cfg)
@@ -120,14 +147,13 @@ def make_round_step(loss_fn, cfg: FedZOConfig, *, algo: Optional[str] = None,
             f"hooks that a custom round_fn (the sharded round) cannot carry "
             f"— run it through the default fedzo round")
     weigh = cfg.weight_by_size
+    channel = cfg.channel_model
 
     def step(state, store: ClientStore):
-        params, momentum, key, fstate, zstate = state
-        if faults is not None:
-            key, k_part, k_batch, k_zo, k_chan, k_fault = \
-                jax.random.split(key, 6)
-        else:
-            key, k_part, k_batch, k_zo, k_chan = round_keys(key)
+        params, momentum, key, fstate, cstate, zstate = state
+        key, k_part, k_batch, k_zo, k_chan, k_fault, k_chanm = \
+            split_round_keys(key, faults=faults is not None,
+                             channel=channel is not None)
         idx = sample_participants(k_part, store.n_clients,
                                   cfg.n_participating)
         batches = sample_batches(store, idx, k_batch, cfg.local_iters,
@@ -135,17 +161,21 @@ def make_round_step(loss_fn, cfg: FedZOConfig, *, algo: Optional[str] = None,
         # FedAvg-style n_i/n weights of the sampled clients (mean-1
         # normalized); only added to the round call when enabled so custom
         # round_fns without a weights kwarg keep working — the per-round
-        # fault realization rides the same pattern
+        # fault realization and channel realization ride the same pattern
         wkw = ({"weights": aircomp.size_weights(store.sizes[idx])}
                if weigh else {})
         if faults is not None:
             fstate, inj = faults.step(k_fault, fstate, idx)
             wkw["faults"] = inj
+        if channel is not None:
+            cstate, wkw["channel"] = channel.step(
+                k_chanm, cstate, idx, h_min=cfg.h_min,
+                schedule=cfg.channel_schedule)
         params, metrics, momentum, zstate = strat.run_round(
             loss_fn, params, batches, k_zo, cfg, channel_rng=k_chan,
             momentum=momentum, zstate=zstate, idx=idx, round_fn=round_fn,
             **wkw)
-        return (params, momentum, key, fstate, zstate), metrics
+        return (params, momentum, key, fstate, cstate, zstate), metrics
 
     return step
 
@@ -161,15 +191,21 @@ def make_cohort_round_step(loss_fn, cfg: FedZOConfig, *,
     The tiered twin of ``make_round_step`` (DESIGN.md §15). Bit-equality
     with the resident round is by construction:
 
-    - the round walks the SAME per-round key chain (5-way split, 6 with
-      faults) but leaves ``k_part`` unconsumed — the host ``CohortStream``
-      already spent its replica choosing which clients were staged — and
-      the chain depends only on the splits, never on consumption;
+    - the round walks the SAME per-round key chain (5-way split, widened
+      by faults / channel) but leaves ``k_part`` unconsumed — the host
+      ``CohortStream`` already spent its replica choosing which clients
+      were staged — and the chain depends only on the splits, never on
+      consumption;
     - minibatches come from ``sample_cohort_batches`` over the staged
       rows and TRUE sizes, the same randint draws and exact gathers the
       resident ``sample_batches`` performs;
     - faults use ``FaultModel.realize`` on the host-replayed availability
       slice (``CohortBatch.avail``), splitting the same 3-way fault chain;
+    - the wireless channel (``cfg.channel_model``) is host-replayed
+      WHOLLY: the chain's ``step`` is pure in (key, state, idx), so the
+      stream stages the realized cohort fading + transmit mask
+      (``CohortBatch.chan_h`` / ``chan_mask``) and the in-trace round
+      leaves ``k_chanm`` unconsumed like ``k_part``;
     - ``zstate`` is cohort-shaped ({"client": [M, ...], "server": ...})
       and ``idx = arange(M)``, so the stateful strategies' gather/scatter
       hooks run unmodified as identity permutations — the [N] master
@@ -183,15 +219,14 @@ def make_cohort_round_step(loss_fn, cfg: FedZOConfig, *,
             f"hooks that a custom round_fn (the sharded round) cannot carry "
             f"— run it through the default fedzo round")
     weigh = cfg.weight_by_size
+    channel = cfg.channel_model
 
     def step(state, cohort: CohortBatch):
         params, momentum, key, zstate = state
-        if faults is not None:
-            key, k_part, k_batch, k_zo, k_chan, k_fault = \
-                jax.random.split(key, 6)
-        else:
-            key, k_part, k_batch, k_zo, k_chan = round_keys(key)
-        del k_part   # consumed host-side by the CohortStream replay
+        key, k_part, k_batch, k_zo, k_chan, k_fault, k_chanm = \
+            split_round_keys(key, faults=faults is not None,
+                             channel=channel is not None)
+        del k_part, k_chanm  # consumed host-side by the CohortStream replay
         batches = sample_cohort_batches(cohort.data, cohort.sizes, k_batch,
                                         cfg.local_iters, cfg.b1)
         # cohort.sizes IS store.sizes[idx] (staged by the stream), so the
@@ -200,6 +235,9 @@ def make_cohort_round_step(loss_fn, cfg: FedZOConfig, *,
                if weigh else {})
         if faults is not None:
             wkw["faults"] = faults.realize(k_fault, cohort.avail)
+        if channel is not None:
+            wkw["channel"] = RoundChannel(model=channel, h=cohort.chan_h,
+                                          mask=cohort.chan_mask)
         idx = jnp.arange(cohort.sizes.shape[0], dtype=jnp.int32)
         params, metrics, momentum, zstate = strat.run_round(
             loss_fn, params, batches, k_zo, cfg, channel_rng=k_chan,
@@ -216,7 +254,9 @@ class ExperimentResult:
     buffer (dict of [ring_size] arrays, slot = round % ring_size);
     ``evals`` the in-scan eval outputs (dict of [n_evals] arrays), one slot
     per eval round in ``eval_rounds``. ``fault_state`` carries the final
-    [N] availability states when a ``FaultModel`` was attached; ``events``
+    [N] availability states when a ``FaultModel`` was attached;
+    ``channel_state`` the final wireless-scenario carry (the [N] fading
+    chain + [N] batteries) when ``cfg.channel_model`` is set; ``events``
     holds structured host-side rows (divergence rollbacks); ``strategy``
     the algorithm name and ``strategy_state`` its final carry (the stacked
     per-client controls/duals + server control for scaffold/feddyn).
@@ -235,6 +275,7 @@ class ExperimentResult:
     ring_size: int
     eval_rounds: np.ndarray
     fault_state: Any = None
+    channel_state: Any = None
     events: list = field(default_factory=list)
     strategy: str = "fedzo"
     strategy_state: Any = None
@@ -322,13 +363,16 @@ def experiment_core(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
                     algo: Optional[str] = None, strategy=None, zstate=None,
                     eval_fn=None, eval_every: int = 0, ring_size: int = 0,
                     round_fn=None, faults: Optional[FaultModel] = None,
-                    fault_state=None, t0=0, total_rounds: int = 0,
+                    fault_state=None, channel_state=None, t0=0,
+                    total_rounds: int = 0,
                     ring=None, ebuf=None, tap: Optional[RoundTap] = None):
     """The traceable experiment body: scan ``rounds`` round steps, ring-
     buffer the metrics, eval in-scan every ``eval_every`` rounds. Returns
-    (params, momentum, key, fault_state, zstate, metrics_ring, evals).
-    Un-jitted so sweeps can vmap it over a stacked config axis
-    (sim/sweep.py).
+    (params, momentum, key, fault_state, channel_state, zstate,
+    metrics_ring, evals). Un-jitted so sweeps can vmap it over a stacked
+    config axis (sim/sweep.py). ``channel_state`` is the wireless-scenario
+    carry — required (``ChannelModel.init_state``) when
+    ``cfg.channel_model`` is set.
 
     Segment mode (the checkpointed runner): ``t0``/``total_rounds`` place
     this scan as rounds [t0, t0+rounds) of a ``total_rounds``-round
@@ -349,7 +393,7 @@ def experiment_core(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
     do_eval = eval_fn is not None and eval_every > 0
     n_evals = (total + eval_every - 1) // eval_every if do_eval else 0
 
-    state0 = (params, momentum, key, fault_state, zstate)
+    state0 = (params, momentum, key, fault_state, channel_state, zstate)
     if ring is None or (do_eval and ebuf is None):
         ring0, ebuf0 = _zero_buffers(
             step, state0, store, eval_fn=eval_fn, params=params,
@@ -366,8 +410,9 @@ def experiment_core(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
         lambda s, _: step(s, store), state0, ring, ebuf, ts,
         ring_alloc=ring_alloc, eval_fn=eval_fn, eval_every=eval_every,
         tap=tap)
-    params, momentum, key, fault_state, zstate = state
-    return params, momentum, key, fault_state, zstate, ring, ebuf
+    params, momentum, key, fault_state, channel_state, zstate = state
+    return (params, momentum, key, fault_state, channel_state, zstate,
+            ring, ebuf)
 
 
 def stream_core(loss_fn, params, cfg: FedZOConfig, key, momentum, *,
@@ -409,21 +454,24 @@ def make_experiment_fn(loss_fn, cfg: FedZOConfig, rounds: int, *,
                        ring_size: int = 0, round_fn=None, faults=None,
                        donate: bool = True, tap=None) -> Callable:
     """Compile the whole experiment once: returns a jitted
-    ``fn(params, momentum, key, fstate, zstate, store) -> (params',
-    momentum', key', fstate', zstate', metrics_ring, evals)`` with the
-    carry donated (pass ``momentum=None`` when cfg.server_momentum is 0,
-    ``fstate=None`` without a fault model, and ``zstate=None`` for the
-    stateless strategies). ``tap`` attaches an in-scan ``obs.RoundTap``."""
+    ``fn(params, momentum, key, fstate, cstate, zstate, store) ->
+    (params', momentum', key', fstate', cstate', zstate', metrics_ring,
+    evals)`` with the carry donated (pass ``momentum=None`` when
+    cfg.server_momentum is 0, ``fstate=None`` without a fault model,
+    ``cstate=None`` without ``cfg.channel_model``, and ``zstate=None`` for
+    the stateless strategies). ``tap`` attaches an in-scan
+    ``obs.RoundTap``."""
     strat = _resolve(strategy, algo, cfg)
 
-    def fn(params, momentum, key, fstate, zstate, store):
+    def fn(params, momentum, key, fstate, cstate, zstate, store):
         return experiment_core(loss_fn, params, store, cfg, rounds, key,
                                momentum, strategy=strat, zstate=zstate,
                                eval_fn=eval_fn, eval_every=eval_every,
                                ring_size=ring_size, round_fn=round_fn,
-                               faults=faults, fault_state=fstate, tap=tap)
+                               faults=faults, fault_state=fstate,
+                               channel_state=cstate, tap=tap)
 
-    return jax.jit(fn, donate_argnums=(0, 1, 2, 3, 4) if donate else ())
+    return jax.jit(fn, donate_argnums=(0, 1, 2, 3, 4, 5) if donate else ())
 
 
 def run_experiment(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
@@ -501,6 +549,11 @@ def run_experiment(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
     if momentum is None and strat.has_momentum(cfg):
         momentum = tree_zeros_like(params)
     fstate = faults.init_state(store.n_clients) if faults is not None else None
+    channel = cfg.channel_model
+    # the chain's round-0 key is folded OFF the experiment key (never a
+    # split of the round chain), so channel-off runs keep their key usage
+    cstate = (channel.init_state(store.n_clients, channel_lib.init_key(key))
+              if channel is not None else None)
     zstate = strat.init_state(params, cfg, store.n_clients)
     do_eval = eval_fn is not None and eval_every > 0
     tap = None
@@ -510,14 +563,14 @@ def run_experiment(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
         tap = RoundTap(sink, tap_every)
     # the byte model reads params metadata, so build it BEFORE the run
     # donates the buffers
-    ledger = CommsLedger.from_run(cfg, params)
+    ledger = CommsLedger.from_run(cfg, params, channel=channel)
     n_clients = store.n_clients
     if checkpoint_every > 0:
         return _run_checkpointed(
             loss_fn, params, store, cfg, rounds, strategy=strat,
             eval_fn=eval_fn, eval_every=eval_every, ring_size=ring_size,
             key=key, momentum=momentum, round_fn=round_fn, faults=faults,
-            fstate=fstate, zstate=zstate, donate=donate,
+            fstate=fstate, cstate=cstate, zstate=zstate, donate=donate,
             checkpoint_every=checkpoint_every,
             checkpoint_dir=checkpoint_dir, resume=resume,
             max_segments=max_segments, segment_callback=segment_callback,
@@ -527,7 +580,7 @@ def run_experiment(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
                             eval_fn=eval_fn, eval_every=eval_every,
                             ring_size=ring_size, round_fn=round_fn,
                             faults=faults, donate=donate, tap=tap)
-    args = (params, momentum, key, fstate, zstate, store)
+    args = (params, momentum, key, fstate, cstate, zstate, store)
     if tracer is not None:
         from repro.checkpoint.checkpoint import config_hash
         ckey = ("experiment", rounds, config_hash(cfg), strat.name,
@@ -538,36 +591,40 @@ def run_experiment(loss_fn, params, store: ClientStore, cfg: FedZOConfig,
                 out = jax.block_until_ready(compiled(*args))
     else:
         out = fn(*args)
-    params, momentum, key, fstate, zstate, ring, ebuf = out
+    params, momentum, key, fstate, cstate, zstate, ring, ebuf = out
     eval_rounds = np.arange(0, rounds, eval_every) if do_eval \
         else np.arange(0)
     result = ExperimentResult(params=params, momentum=momentum, key=key,
                               metrics=ring, evals=ebuf, rounds=rounds,
                               ring_size=min(rounds, ring_size) or rounds,
                               eval_rounds=eval_rounds, fault_state=fstate,
+                              channel_state=cstate,
                               strategy=strat.name, strategy_state=zstate,
                               ledger=ledger)
     sink_path = getattr(sink, "path", None)
     if sink_path:
         result.manifest = obs_manifest.build_manifest(
             cfg, strategy=strat.name, rounds=rounds, n_clients=n_clients,
-            ledger=ledger, faults=faults, events=result.events,
+            ledger=ledger, faults=faults, channel=channel,
+            events=result.events,
             extra={"tap_every": tap.every} if tap is not None else None)
         obs_manifest.write_manifest(f"{sink_path}.manifest.json",
                                     result.manifest)
     return result
 
 
-def _carry_to_state(params, momentum, key, fstate, zstate, ring,
+def _carry_to_state(params, momentum, key, fstate, cstate, zstate, ring,
                     ebuf) -> dict:
     """The durable form of the full experiment carry: one pytree whose
     leaves are all plain arrays (the typed PRNG key is exported via
     ``jax.random.key_data``; ``wrap_key_data`` re-types it on restore).
-    A ``None`` zstate contributes no leaves, so snapshots of stateless
-    strategies keep the pre-strategy npz layout."""
+    A ``None`` zstate (or cstate) contributes no leaves, so snapshots of
+    runs without the optional processes keep the historical npz layout —
+    and channel-on snapshots carry the fading chain + batteries, so a
+    kill-and-resume continues the wireless scenario bit-exactly."""
     return {"params": params, "momentum": momentum,
             "key": jax.random.key_data(key), "fstate": fstate,
-            "zstate": zstate, "ring": ring, "ebuf": ebuf}
+            "cstate": cstate, "zstate": zstate, "ring": ring, "ebuf": ebuf}
 
 
 def _state_to_carry(state: dict, cfg: FedZOConfig):
@@ -576,9 +633,9 @@ def _state_to_carry(state: dict, cfg: FedZOConfig):
     key = jax.random.wrap_key_data(jnp.asarray(state["key"]),
                                    impl=cfg.prng_impl)
     dev = [jax.tree.map(jnp.asarray, state[k])
-           for k in ("params", "momentum", "fstate", "zstate", "ring",
-                     "ebuf")]
-    return (dev[0], dev[1], key, dev[2], dev[3], dev[4], dev[5])
+           for k in ("params", "momentum", "fstate", "cstate", "zstate",
+                     "ring", "ebuf")]
+    return (dev[0], dev[1], key, dev[2], dev[3], dev[4], dev[5], dev[6])
 
 
 def _finite_state(state: dict, rounds_done, ring_alloc, eval_every,
@@ -607,7 +664,7 @@ def _finite_state(state: dict, rounds_done, ring_alloc, eval_every,
 
 def _run_checkpointed(loss_fn, params, store, cfg, rounds, *, strategy,
                       eval_fn, eval_every, ring_size, key, momentum,
-                      round_fn, faults, fstate, zstate, donate,
+                      round_fn, faults, fstate, cstate, zstate, donate,
                       checkpoint_every, checkpoint_dir, resume,
                       max_segments, segment_callback, max_retries,
                       lr_backoff, tap=None, tracer=None,
@@ -644,15 +701,16 @@ def _run_checkpointed(loss_fn, params, store, cfg, rounds, *, strategy,
     ring, ebuf = _zero_buffers(
         make_round_step(loss_fn, cfg, strategy=strat, round_fn=round_fn,
                         faults=faults),
-        (params, momentum, key, fstate, zstate), store, eval_fn=eval_fn,
-        params=params, ring_alloc=ring_alloc, n_evals=n_evals)
+        (params, momentum, key, fstate, cstate, zstate), store,
+        eval_fn=eval_fn, params=params, ring_alloc=ring_alloc,
+        n_evals=n_evals)
 
     t, events, cur_lr = 0, [], cfg.lr
     if resume:
         snap = ckpt.latest_run_state(checkpoint_dir)
         if snap is not None:
-            like = _carry_to_state(params, momentum, key, fstate, zstate,
-                                   ring, ebuf)
+            like = _carry_to_state(params, momentum, key, fstate, cstate,
+                                   zstate, ring, ebuf)
             state, meta = ckpt.restore_run_state(snap, like)
             if meta.get("config_hash") not in (None, orig_hash):
                 import warnings
@@ -663,7 +721,7 @@ def _run_checkpointed(loss_fn, params, store, cfg, rounds, *, strategy,
             t = int(meta["round"])
             events = list(meta.get("events", []))
             cur_lr = float(meta.get("lr", cfg.lr))
-            params, momentum, key, fstate, zstate, ring, ebuf = \
+            params, momentum, key, fstate, cstate, zstate, ring, ebuf = \
                 _state_to_carry(state, cfg)
 
     def checkpoint_meta():
@@ -675,7 +733,7 @@ def _run_checkpointed(loss_fn, params, store, cfg, rounds, *, strategy,
         man = obs_manifest.build_manifest(
             cfg, strategy=strat.name, rounds=rounds,
             n_clients=store.n_clients, ledger=ledger, faults=faults,
-            events=events,
+            channel=cfg.channel_model, events=events,
             extra={"checkpoint_every": checkpoint_every, "lr": cur_lr,
                    "rounds_done": t,
                    "tap_every": tap.every if tap is not None else None})
@@ -686,8 +744,8 @@ def _run_checkpointed(loss_fn, params, store, cfg, rounds, *, strategy,
         # round-0 snapshot: the rollback anchor for a first-segment
         # divergence (the donated pre-segment carry is gone by then)
         state0 = jax.device_get(
-            _carry_to_state(params, momentum, key, fstate, zstate, ring,
-                            ebuf))
+            _carry_to_state(params, momentum, key, fstate, cstate, zstate,
+                            ring, ebuf))
         ckpt.save_run_state(checkpoint_dir, state0, round_idx=0,
                             meta=checkpoint_meta())
     write_run_manifest()   # provisional: rewritten with final events below
@@ -699,18 +757,19 @@ def _run_checkpointed(loss_fn, params, store, cfg, rounds, *, strategy,
             run_cfg = (cfg if cur_lr == cfg.lr
                        else dataclasses.replace(cfg, lr=cur_lr))
 
-            def fn(params, momentum, key, fstate, zstate, ring, ebuf, t0,
-                   store):
+            def fn(params, momentum, key, fstate, cstate, zstate, ring,
+                   ebuf, t0, store):
                 return experiment_core(
                     loss_fn, params, store, run_cfg, chunk, key, momentum,
                     strategy=strat, zstate=zstate, eval_fn=eval_fn,
                     eval_every=eval_every, ring_size=ring_size,
                     round_fn=round_fn, faults=faults, fault_state=fstate,
-                    t0=t0, total_rounds=rounds, ring=ring, ebuf=ebuf,
-                    tap=tap)
+                    channel_state=cstate, t0=t0, total_rounds=rounds,
+                    ring=ring, ebuf=ebuf, tap=tap)
 
             seg_fns[chunk] = jax.jit(
-                fn, donate_argnums=(0, 1, 2, 3, 4, 5, 6) if donate else ())
+                fn,
+                donate_argnums=(0, 1, 2, 3, 4, 5, 6, 7) if donate else ())
         return seg_fns[chunk]
 
     retries, segments_done = 0, 0
@@ -718,8 +777,8 @@ def _run_checkpointed(loss_fn, params, store, cfg, rounds, *, strategy,
         while t < rounds:
             chunk = min(checkpoint_every, rounds - t)
             jitted = segment_fn(chunk)
-            args = (params, momentum, key, fstate, zstate, ring, ebuf,
-                    jnp.int32(t), store)
+            args = (params, momentum, key, fstate, cstate, zstate, ring,
+                    ebuf, jnp.int32(t), store)
             if tracer is not None:
                 # one compile span per (chunk size, lr) program — reused
                 # executable across same-shape segments
@@ -749,11 +808,11 @@ def _run_checkpointed(loss_fn, params, store, cfg, rounds, *, strategy,
                     tracer.invalidate_compiled()
                 snap = ckpt.latest_run_state(checkpoint_dir)
                 good, _ = ckpt.restore_run_state(snap, state)
-                params, momentum, key, fstate, zstate, ring, ebuf = \
-                    _state_to_carry(good, cfg)
+                params, momentum, key, fstate, cstate, zstate, ring, \
+                    ebuf = _state_to_carry(good, cfg)
                 continue
             retries = 0
-            params, momentum, key, fstate, zstate, ring, ebuf = out
+            params, momentum, key, fstate, cstate, zstate, ring, ebuf = out
             t = t_next
             ckpt.save_run_state(checkpoint_dir, state, round_idx=t,
                                 meta=checkpoint_meta())
@@ -768,7 +827,8 @@ def _run_checkpointed(loss_fn, params, store, cfg, rounds, *, strategy,
     return ExperimentResult(params=params, momentum=momentum, key=key,
                             metrics=ring, evals=ebuf, rounds=t,
                             ring_size=ring_alloc, eval_rounds=eval_rounds,
-                            fault_state=fstate, events=list(events),
+                            fault_state=fstate, channel_state=cstate,
+                            events=list(events),
                             strategy=strat.name, strategy_state=zstate,
                             ledger=ledger, manifest=manifest)
 

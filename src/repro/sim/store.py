@@ -47,11 +47,15 @@ class CohortBatch(NamedTuple):
     sampled clients' rows padded to the cohort's bucket capacity, plus
     their true sizes. In a segment stream every leaf carries an extra
     leading [S] rounds axis. ``avail`` is the host-replayed availability
-    slice of a fault run (None otherwise — no leaf, so the fault-free jit
-    signature is unchanged)."""
+    slice of a fault run; ``chan_h``/``chan_mask`` the host-replayed
+    wireless-scenario realization (sim/channel.py) of a
+    ``cfg.channel_model`` run. All three default None — no leaf, so the
+    jit signature of runs without the optional processes is unchanged."""
     data: Any              # pytree, leaves [M, cap, ...]
     sizes: jnp.ndarray     # [M] int32 true row counts
     avail: Any = None      # [M] bool fault-chain slice, or None
+    chan_h: Any = None     # [M] complex64 cohort fading slice, or None
+    chan_mask: Any = None  # [M] bool transmit mask (sched ∧ battery), or None
 
 
 def client_sizes(clients) -> list:

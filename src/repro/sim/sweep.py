@@ -45,10 +45,29 @@ def scenario_grid(**axes) -> list:
     return out
 
 
+def _freeze(key, value):
+    """Hashable form of one static override: the static signature is a
+    dict key (the compile-group index), so every value must hash.
+    Sequences (e.g. shape lists) normalize to tuples; anything else
+    unhashable raises naming the offending field instead of the opaque
+    ``TypeError: unhashable type`` the group dict would throw."""
+    if isinstance(value, (list, tuple)):
+        return tuple(_freeze(key, v) for v in value)
+    try:
+        hash(value)
+    except TypeError:
+        raise TypeError(
+            f"scenario field {key!r} has an unhashable static value of "
+            f"type {type(value).__name__} — static overrides group "
+            f"compiles by value, so pass a hashable (lists are "
+            f"normalized to tuples automatically)") from None
+    return value
+
+
 def _split(scenario: dict):
     dyn = {k: v for k, v in scenario.items() if k in DYNAMIC_FIELDS
            or k == "seed"}
-    static = tuple(sorted((k, v) for k, v in scenario.items()
+    static = tuple(sorted((k, _freeze(k, v)) for k, v in scenario.items()
                           if k not in dyn))
     return static, dyn
 
@@ -104,11 +123,19 @@ def run_sweep(loss_fn, params, store: ClientStore, base_cfg: FedZOConfig,
             c = dataclasses.replace(cfg, **dyn)
             key = jax.random.key(seed, impl=cfg.prng_impl)
             zstate = strat.init_state(params, c, store.n_clients)
+            # the wireless scenario sweeps as a STATIC axis (the hashable
+            # frozen ChannelModel changes the traced round program); its
+            # chain state inits per scenario off the fold-in key, exactly
+            # like run_experiment
+            from repro.sim import channel as channel_lib
+            cstate = (c.channel_model.init_state(
+                store.n_clients, channel_lib.init_key(key))
+                if c.channel_model is not None else None)
             out = engine.experiment_core(
                 loss_fn, params, store, c, rounds, key, None, strategy=strat,
-                zstate=zstate, eval_fn=eval_fn, eval_every=eval_every,
-                ring_size=ring_size)
-            return out[5], out[6]
+                zstate=zstate, channel_state=cstate, eval_fn=eval_fn,
+                eval_every=eval_every, ring_size=ring_size)
+            return out[6], out[7]
 
         jitted = jax.jit(jax.vmap(one))
         if tracer is not None:

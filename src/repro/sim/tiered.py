@@ -27,11 +27,13 @@ the device.
   checkpoints and divergence rollback matching the resident runner, and a
   prefetch-stall ledger for sim_bench.
 
-[N]-sized carry state never enters the trace: the fault chain and the
-stateful strategies' per-client masters ({"client": [N, ...]}) are
-host-resident; each segment slices the cohort's [M] rows in and scatters
-the returned rows back. Snapshots keep the SAME npz leaf layout as the
-resident engine's (params/momentum/key/fstate/zstate/ring/ebuf), so a
+[N]-sized carry state never enters the trace: the fault chain, the
+wireless-scenario chain (``cfg.channel_model`` — host-replayed wholesale,
+only the [M] realized fading + transmit mask is staged), and the stateful
+strategies' per-client masters ({"client": [N, ...]}) are host-resident;
+each segment slices the cohort's [M] rows in and scatters the returned
+rows back. Snapshots keep the SAME npz leaf layout as the resident
+engine's (params/momentum/key/fstate/cstate/zstate/ring/ebuf), so a
 tiered run can resume a resident run's checkpoint and vice versa.
 
 The central acceptance proof (tests/test_tiered.py): a ``HostStore`` run
@@ -61,6 +63,7 @@ from repro.core import strategy as strategy_mod
 from repro.obs import manifest as obs_manifest
 from repro.obs.ledger import CommsLedger
 from repro.obs.taps import RoundTap
+from repro.sim import channel as channel_lib
 from repro.sim import engine
 from repro.sim.faults import DivergenceError, FaultModel
 from repro.sim.store import (ClientStore, CohortBatch, build_store,
@@ -161,7 +164,8 @@ class HostStore:
                 "round_bytes": int(nbytes // max(1, s))}
         return data, sizes, meta
 
-    def cohort_struct(self, m: int, *, with_avail: bool) -> CohortBatch:
+    def cohort_struct(self, m: int, *, with_avail: bool,
+                      with_channel: bool = False) -> CohortBatch:
         """A ``ShapeDtypeStruct`` CohortBatch at the max capacity — the
         ``jax.eval_shape`` input for sizing the metrics ring."""
         cap = self.capacity
@@ -172,7 +176,11 @@ class HostStore:
         return CohortBatch(
             data=data, sizes=jax.ShapeDtypeStruct((m,), jnp.int32),
             avail=(jax.ShapeDtypeStruct((m,), jnp.bool_)
-                   if with_avail else None))
+                   if with_avail else None),
+            chan_h=(jax.ShapeDtypeStruct((m,), jnp.complex64)
+                    if with_channel else None),
+            chan_mask=(jax.ShapeDtypeStruct((m,), jnp.bool_)
+                       if with_channel else None))
 
     # -- tier conversion -----------------------------------------------------
     def to_resident(self) -> ClientStore:
@@ -316,29 +324,37 @@ class CohortStream:
     """Host replica of the engine's per-round key chain.
 
     Each ``next_round()`` performs the EXACT splits the compiled round
-    performs on its carry key — ``split(key, 5)`` (6 with faults) — and
-    consumes the streams the trace leaves unconsumed: ``k_part`` draws the
-    participation permutation (``sample_participants``, same Threefry
-    path, eager instead of traced — bit-identical), and on fault runs the
-    availability substream of ``k_fault`` advances the [N] chain
-    (``FaultModel.advance``). The stream's key therefore stays in lockstep
-    with the device carry key round for round (pinned by test), which is
-    what lets staging run arbitrarily far ahead of the device."""
+    performs on its carry key — ``engine.split_round_keys``, the shared
+    single source of truth — and consumes the streams the trace leaves
+    unconsumed: ``k_part`` draws the participation permutation
+    (``sample_participants``, same Threefry path, eager instead of traced
+    — bit-identical), on fault runs the availability substream of
+    ``k_fault`` advances the [N] chain (``FaultModel.advance``), and on
+    wireless-scenario runs ``k_chanm`` advances the WHOLE channel chain
+    (``ChannelModel.step`` is pure in (key, state, idx) with no delta
+    dependence, so the host replay — fading, scheduling, battery debits —
+    is the in-carry derivation, not an approximation of it). The stream's
+    key therefore stays in lockstep with the device carry key round for
+    round (pinned by test), which is what lets staging run arbitrarily
+    far ahead of the device."""
 
     def __init__(self, store: HostStore, cfg: FedZOConfig, key, *,
-                 faults: Optional[FaultModel] = None, fstate=None):
+                 faults: Optional[FaultModel] = None, fstate=None,
+                 cstate=None):
         self.store, self.cfg = store, cfg
         self.key = key
         self.faults = faults
         self.fstate = fstate
+        self.channel = cfg.channel_model
+        self.cstate = cstate
 
     def next_round(self) -> tuple:
-        """Advance one round: -> (idx [M] int64, avail [M] bool | None)."""
-        if self.faults is not None:
-            ks = jax.random.split(self.key, 6)
-            self.key, k_part, k_fault = ks[0], ks[1], ks[5]
-        else:
-            self.key, k_part, _kb, _kz, _kc = engine.round_keys(self.key)
+        """Advance one round: -> (idx [M] int64, avail [M] bool | None,
+        chan_h [M] complex64 | None, chan_mask [M] bool | None)."""
+        self.key, k_part, _kb, _kz, _kc, k_fault, k_chanm = \
+            engine.split_round_keys(self.key,
+                                    faults=self.faults is not None,
+                                    channel=self.channel is not None)
         idx = np.asarray(sample_participants(
             k_part, self.store.n_clients, self.cfg.n_participating),
             np.int64)
@@ -347,15 +363,27 @@ class CohortStream:
             k_avail = jax.random.split(k_fault, 3)[0]
             self.fstate = self.faults.advance(k_avail, self.fstate)
             avail = np.asarray(self.fstate)[idx]
-        return idx, avail
+        chan_h = chan_mask = None
+        if self.channel is not None:
+            self.cstate, rchan = self.channel.step(
+                k_chanm, self.cstate, jnp.asarray(idx),
+                h_min=self.cfg.h_min, schedule=self.cfg.channel_schedule)
+            chan_h = np.asarray(rchan.h)
+            chan_mask = np.asarray(rchan.mask)
+        return idx, avail, chan_h, chan_mask
 
     def plan(self, n: int) -> tuple:
-        """Replay ``n`` rounds ahead: -> (idx [n, M], avail [n, M]|None)."""
+        """Replay ``n`` rounds ahead: -> (idx [n, M], avail [n, M]|None,
+        chan_h [n, M]|None, chan_mask [n, M]|None)."""
         drawn = [self.next_round() for _ in range(n)]
         idx = np.stack([d[0] for d in drawn])
         avail = (np.stack([d[1] for d in drawn])
                  if self.faults is not None else None)
-        return idx, avail
+        chan_h = (np.stack([d[2] for d in drawn])
+                  if self.channel is not None else None)
+        chan_mask = (np.stack([d[3] for d in drawn])
+                     if self.channel is not None else None)
+        return idx, avail, chan_h, chan_mask
 
 
 class _Ready:
@@ -424,12 +452,17 @@ def run_tiered_experiment(loss_fn, params, store: HostStore,
         if sink is None:
             raise ValueError("tap_every=k needs a sink= to stream into")
         tap = RoundTap(sink, tap_every)
-    ledger = CommsLedger.from_run(cfg, params)
+    channel = cfg.channel_model
+    ledger = CommsLedger.from_run(cfg, params, channel=channel)
     if checkpoint_every > 0 and checkpoint_dir is None:
         raise ValueError("checkpoint_every > 0 requires checkpoint_dir")
 
     # host-resident [N] halves of the carry
     fstate = faults.init_state(n_clients) if faults is not None else None
+    # wireless-scenario chain (sim/channel.py): host-resident like fstate —
+    # the stream replays it and stages only the [M] realization per round
+    cstate = (channel.init_state(n_clients, channel_lib.init_key(key))
+              if channel is not None else None)
     z_template = strat.init_state(params, cfg, 1)
     stateful = z_template is not None
     if stateful:
@@ -454,7 +487,8 @@ def run_tiered_experiment(loss_fn, params, store: HostStore,
             "server": z_server}
     ring, ebuf = engine._zero_buffers(
         step, (params, momentum, key, zc_struct),
-        store.cohort_struct(m, with_avail=faults is not None),
+        store.cohort_struct(m, with_avail=faults is not None,
+                            with_channel=channel is not None),
         eval_fn=eval_fn, params=params, ring_alloc=ring_alloc,
         n_evals=n_evals)
 
@@ -463,10 +497,11 @@ def run_tiered_experiment(loss_fn, params, store: HostStore,
 
     def pack_state():
         # SAME leaf layout as the resident engine's _carry_to_state: the
-        # host-resident halves slot into the fstate/zstate keys, so
+        # host-resident halves slot into the fstate/cstate/zstate keys, so
         # tiered and resident snapshots of one run interchange
         return {"params": params, "momentum": momentum,
                 "key": jax.random.key_data(key), "fstate": fstate,
+                "cstate": cstate,
                 "zstate": ({"client": client_master, "server": z_server}
                            if stateful else None),
                 "ring": ring, "ebuf": ebuf}
@@ -484,10 +519,11 @@ def run_tiered_experiment(loss_fn, params, store: HostStore,
             t = int(meta["round"])
             events = list(meta.get("events", []))
             cur_lr = float(meta.get("lr", cfg.lr))
-            params, momentum, key, fstate, client_master, z_server, ring, \
-                ebuf = _unpack_state(state_r, cfg, stateful)
+            params, momentum, key, fstate, cstate, client_master, \
+                z_server, ring, ebuf = _unpack_state(state_r, cfg, stateful)
 
-    stream = CohortStream(store, cfg, key, faults=faults, fstate=fstate)
+    stream = CohortStream(store, cfg, key, faults=faults, fstate=fstate,
+                          cstate=cstate)
 
     def checkpoint_meta():
         return {"round": t, "rounds_total": rounds, "algo": strat.name,
@@ -503,7 +539,7 @@ def run_tiered_experiment(loss_fn, params, store: HostStore,
     def write_run_manifest():
         man = obs_manifest.build_manifest(
             cfg, strategy=strat.name, rounds=rounds, n_clients=n_clients,
-            ledger=ledger, faults=faults, events=events,
+            ledger=ledger, faults=faults, channel=channel, events=events,
             extra={"checkpoint_every": checkpoint_every, "lr": cur_lr,
                    "rounds_done": t,
                    "tap_every": tap.every if tap is not None else None,
@@ -537,9 +573,10 @@ def run_tiered_experiment(loss_fn, params, store: HostStore,
                 fn, donate_argnums=(0, 1, 2, 3, 4, 5) if donate else ())
         return seg_fns[cur_lr]
 
-    def stage_put(idx, avail):
+    def stage_put(idx, avail, chan_h, chan_mask):
         data, sizes, meta = store.stage(idx)
-        xb = CohortBatch(data=data, sizes=sizes, avail=avail)
+        xb = CohortBatch(data=data, sizes=sizes, avail=avail,
+                         chan_h=chan_h, chan_mask=chan_mask)
         return jax.device_put(xb), meta
 
     pool = ThreadPoolExecutor(max_workers=1) if prefetch else None
@@ -549,12 +586,13 @@ def run_tiered_experiment(loss_fn, params, store: HostStore,
         if checkpoint_every > 0:
             end = min(end,
                       (start // checkpoint_every + 1) * checkpoint_every)
-        idx, avail = stream.plan(end - start)
-        fut = (pool.submit(stage_put, idx, avail) if pool is not None
-               else _Ready(stage_put(idx, avail)))
-        # the chain state AS OF round `end` — stream.fstate races ahead
-        # with the prefetch, snapshots must not
-        return fut, idx, end, stream.fstate
+        idx, avail, chan_h, chan_mask = stream.plan(end - start)
+        fut = (pool.submit(stage_put, idx, avail, chan_h, chan_mask)
+               if pool is not None
+               else _Ready(stage_put(idx, avail, chan_h, chan_mask)))
+        # the chain state AS OF round `end` — stream.fstate/.cstate race
+        # ahead with the prefetch, snapshots must not
+        return fut, idx, end, stream.fstate, stream.cstate
 
     staging_rows: dict = {}
     prefetch_stats = {"stall_s": 0.0, "wall_s": 0.0, "stall_pct": 0.0,
@@ -569,7 +607,7 @@ def run_tiered_experiment(loss_fn, params, store: HostStore,
     try:
         with (tracer.profile() if tracer is not None else nullcontext()):
             while t < rounds:
-                fut, idx, end, seg_fstate = pending
+                fut, idx, end, seg_fstate, seg_cstate = pending
                 w0 = time.perf_counter()
                 xs, smeta = fut.result()
                 waited = time.perf_counter() - w0
@@ -598,6 +636,7 @@ def run_tiered_experiment(loss_fn, params, store: HostStore,
                     out = run(*args)
                 params, momentum, key, zc_out, ring, ebuf = out
                 fstate = seg_fstate
+                cstate = seg_cstate
                 if stateful:
                     host_rows = jax.device_get(zc_out["client"])
                     jax.tree.map(lambda a, v: a.__setitem__(idx[0], v),
@@ -630,13 +669,14 @@ def run_tiered_experiment(loss_fn, params, store: HostStore,
                             tracer.invalidate_compiled()
                         snap = ckpt.latest_run_state(checkpoint_dir)
                         good, gm = ckpt.restore_run_state(snap, state)
-                        params, momentum, key, fstate, client_master, \
-                            z_server, ring, ebuf = _unpack_state(
-                                good, cfg, stateful)
+                        params, momentum, key, fstate, cstate, \
+                            client_master, z_server, ring, ebuf = \
+                            _unpack_state(good, cfg, stateful)
                         t = int(gm["round"])
                         last_ckpt = t
                         stream = CohortStream(store, cfg, key,
-                                              faults=faults, fstate=fstate)
+                                              faults=faults, fstate=fstate,
+                                              cstate=cstate)
                         pending = submit(t)
                         cold = True
                         continue
@@ -667,6 +707,8 @@ def run_tiered_experiment(loss_fn, params, store: HostStore,
         evals=ebuf, rounds=t, ring_size=ring_alloc,
         eval_rounds=eval_rounds,
         fault_state=(jnp.asarray(fstate) if faults is not None else None),
+        channel_state=(jax.tree.map(jnp.asarray, cstate)
+                       if channel is not None else None),
         events=list(events), strategy=strat.name,
         strategy_state=({"client": jax.tree.map(jnp.asarray, client_master),
                          "server": z_server} if stateful else None),
@@ -676,7 +718,8 @@ def run_tiered_experiment(loss_fn, params, store: HostStore,
     if sink_path:
         result.manifest = obs_manifest.build_manifest(
             cfg, strategy=strat.name, rounds=rounds, n_clients=n_clients,
-            ledger=ledger, faults=faults, events=result.events,
+            ledger=ledger, faults=faults, channel=channel,
+            events=result.events,
             extra={**({"tap_every": tap.every} if tap is not None else {}),
                    **tiered_block()})
         obs_manifest.write_manifest(f"{sink_path}.manifest.json",
@@ -695,6 +738,8 @@ def _unpack_state(state: dict, cfg: FedZOConfig, stateful: bool) -> tuple:
                 else jax.tree.map(jnp.asarray, state["momentum"]))
     fstate = (None if state["fstate"] is None
               else jnp.asarray(state["fstate"]))
+    cstate = (None if state.get("cstate") is None
+              else jax.tree.map(jnp.asarray, state["cstate"]))
     if stateful:
         client_master = jax.tree.map(
             lambda a: np.array(jax.device_get(a)), state["zstate"]["client"])
@@ -703,4 +748,5 @@ def _unpack_state(state: dict, cfg: FedZOConfig, stateful: bool) -> tuple:
         client_master, z_server = None, None
     ring = jax.tree.map(jnp.asarray, state["ring"])
     ebuf = jax.tree.map(jnp.asarray, state["ebuf"])
-    return params, momentum, key, fstate, client_master, z_server, ring, ebuf
+    return (params, momentum, key, fstate, cstate, client_master, z_server,
+            ring, ebuf)

@@ -49,35 +49,48 @@ def test_noise_variance_matches_eq17():
 
 def test_explicit_channel_matches_closed_form_variance():
     """The complex-channel simulation agrees with the Eq.17 closed form:
-    unbiased mean recovery and matching error variance (up to the complex→
-    real projection factor 1/2 ≤ c ≤ 1)."""
+    the recovered update is exactly the scheduled-subset mean plus receiver
+    noise whose variance matches σ_w²Δmax/(m²dPh²) under the complex→real
+    projection (factor 1/2)."""
     rng = np.random.default_rng(2)
     M, d = 5, 512
     deltas = jnp.asarray(rng.normal(size=(M, d)), dtype=jnp.float32)
-    mean = np.mean(np.asarray(deltas), axis=0)
-    errs = []
+    errs, pred = [], []
     for s in range(100):
         y, diag = aircomp_simulate_channel(deltas, jax.random.key(s),
                                            snr_db=0.0, h_min=0.8)
-        errs.append(np.asarray(y) - mean)
+        sched = np.abs(np.asarray(diag["h"])) >= 0.8
+        if not sched.any():
+            continue
+        errs.append(np.asarray(y)
+                    - np.asarray(deltas)[sched].mean(axis=0))
+        pred.append(float(diag["delta_max"])
+                    / (sched.sum() ** 2 * d * 0.8 ** 2) / 2.0)
     bias = np.abs(np.mean(np.stack(errs)))
     assert bias < 0.02, bias
-    sq = np.sum(np.asarray(deltas) ** 2, axis=1)
-    full_var = sq.max() / (M ** 2 * d * 0.8 ** 2)
     emp = np.var(np.stack(errs))
-    assert 0.3 * full_var < emp < 1.2 * full_var  # real projection halves it
+    expected = np.mean(pred)
+    assert 0.7 * expected < emp < 1.4 * expected, (emp, expected)
 
 
 def test_energy_constraint_for_scheduled_devices():
-    """‖α_i Δ_i‖² ≤ dP whenever |h_i| ≥ h_min (the scheduling criterion)."""
+    """‖α_i Δ_i‖² ≤ dP for EVERY device: scheduled devices stay within the
+    Eq.-15 budget, deep-fade devices (|h| < h_min) transmit nothing at all.
+    Equal-norm rows make the old behavior unmistakable — any unscheduled
+    row that transmitted would need α = h_min/|h| > 1 and blow through the
+    budget. Regression: pre-fix the mask was ignored and unscheduled rows
+    radiated over-budget energy."""
     rng = np.random.default_rng(3)
-    deltas = jnp.asarray(rng.normal(size=(8, 128)), dtype=jnp.float32)
-    y, diag = aircomp_simulate_channel(deltas, jax.random.key(7), snr_db=0.0,
-                                       h_min=0.8)
-    scheduled = np.abs(np.asarray(diag["h"])) >= 0.8
-    if scheduled.any():
-        assert np.all(np.asarray(diag["tx_energy"])[scheduled]
-                      <= diag["energy_budget"] * (1 + 1e-5))
+    base = rng.normal(size=(8, 128)).astype(np.float32)
+    base /= np.linalg.norm(base, axis=1, keepdims=True)   # equal ‖Δ_i‖
+    y, diag = aircomp_simulate_channel(jnp.asarray(base), jax.random.key(7),
+                                       snr_db=0.0, h_min=0.8)
+    scheduled = np.asarray(diag["mask"])
+    assert 0 < scheduled.sum() < 8        # both populations present
+    energy = np.asarray(diag["tx_energy"])
+    assert np.all(energy <= diag["energy_budget"] * (1 + 1e-5)), energy
+    np.testing.assert_array_equal(energy[~scheduled], 0.0)
+    assert float(diag["m_effective"]) == scheduled.sum()
 
 
 @hypothesis.given(st.floats(0.2, 1.5))

@@ -1,0 +1,367 @@
+"""Wireless scenario engine (sim/channel.py, DESIGN.md §16).
+
+Pins the ``ChannelModel`` contracts:
+- the AR(1) chain is CONTEXT-STABLE: the eager host replay (the tiered
+  ``CohortStream``'s derivation) bit-matches the in-scan carry for the
+  full state (fading, battery), the realized cohort fading, and the
+  transmit mask — the invariant the integer fixed-point numerics exist
+  for;
+- ρ=0 advances are bit-exactly the i.i.d. fresh draw (the paper's
+  Sec. IV-A per-round channel law, now as the chain's degenerate case);
+- ``channel_model=None`` runs are byte-identical to pre-scenario runs
+  (the goldens pin the trajectory; here we pin the key-chain layout);
+- engine ≡ tiered ≡ host-driven FedServer bitwise with the channel on,
+  including kill-and-resume with the chain + batteries in the carry;
+- energy gating drains batteries monotonically, shrinks ``m_effective``,
+  and lands in the ledger's ``energy_spent`` column and the manifest's
+  ``channel`` block.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import hypothesis, st
+
+from repro import sim
+from repro.fed.server import FedServer
+from repro.models.simple import softmax_init, softmax_loss
+from repro.sim import channel as channel_lib
+from repro.sim.channel import ChannelModel
+
+from test_sim import _assert_trees_bitequal, _cfg, _setup
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=10,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("ci")
+
+
+def _chan_cfg(**kw):
+    base = dict(channel_schedule=True, h_min=0.3)
+    base.update(kw)
+    return _cfg(**base)
+
+
+# ---------------------------------------------------------------------------
+# model config
+
+
+def test_channel_model_validation_and_derived():
+    with pytest.raises(ValueError):
+        ChannelModel(rho=1.0)
+    with pytest.raises(ValueError):
+        ChannelModel(rho=-0.1)
+    with pytest.raises(ValueError):
+        ChannelModel(tx_cost=0.0)
+    with pytest.raises(ValueError):
+        ChannelModel.from_doppler(-1.0)
+    assert not ChannelModel().gated
+    assert ChannelModel(battery=2.0).gated
+    # from_doppler: slow mover stays correlated, fast mover ≈ i.i.d.;
+    # fd_T=0 would be ρ=1 (frozen channel), which the AR(1)
+    # parameterization excludes
+    assert ChannelModel.from_doppler(0.01).rho == pytest.approx(
+        np.exp(-0.02 * np.pi))
+    assert ChannelModel.from_doppler(2.0).rho < 1e-5
+    with pytest.raises(ValueError):
+        ChannelModel.from_doppler(0.0)
+    cm = ChannelModel(rho=float(np.exp(-1.0)))
+    assert cm.coherence_rounds == pytest.approx(1.0)
+    d = cm.describe()
+    assert d["rho"] == cm.rho and d["energy_gated"] is False
+    assert hash(cm) == hash(ChannelModel(rho=float(np.exp(-1.0))))
+
+
+# ---------------------------------------------------------------------------
+# chain numerics
+
+
+@hypothesis.given(st.integers(0, 10_000), st.integers(2, 40))
+def test_rho0_advance_is_iid_draw_bitwise(seed, n):
+    """ρ=0 is the paper's i.i.d. per-round channel, bit for bit: the
+    advance returns the fresh CN(0,1) innovation itself."""
+    cm = ChannelModel(rho=0.0)
+    h = cm._innovation(jax.random.key(seed + 1), n)
+    k = jax.random.key(seed)
+    np.testing.assert_array_equal(np.asarray(cm.advance(k, h)),
+                                  np.asarray(cm._innovation(k, n)))
+
+
+@hypothesis.given(st.integers(0, 10_000),
+                  st.floats(0.0, 0.99), st.integers(1, 12))
+def test_host_replay_bitmatches_in_scan_chain(seed, rho, rounds):
+    """The tiered path's eager host replay of the chain (advance +
+    scheduling + battery debit) is BIT-IDENTICAL to the same chain run
+    inside a jitted lax.scan — the central DESIGN.md §16 invariant that
+    lets the CohortStream stage realizations arbitrarily ahead of the
+    device."""
+    cm = ChannelModel(rho=float(rho), battery=3.0, tx_cost=1.0)
+    n, m = 10, 4
+    state0 = cm.init_state(n, channel_lib.init_key(jax.random.key(seed)))
+    idx = jnp.arange(m)
+    ks = jax.random.split(jax.random.key(seed + 7), rounds)
+
+    def body(carry, k):
+        st, rc = cm.step(k, carry, idx, h_min=0.3, schedule=True)
+        return st, (rc.h, rc.mask)
+
+    scan_state, (hs, ms) = jax.jit(
+        lambda st, ks: jax.lax.scan(body, st, ks))(state0, ks)
+    st = state0
+    for t in range(rounds):
+        st, rc = cm.step(ks[t], st, idx, h_min=0.3, schedule=True)
+        np.testing.assert_array_equal(np.asarray(rc.h), np.asarray(hs[t]))
+        np.testing.assert_array_equal(np.asarray(rc.mask), np.asarray(ms[t]))
+    _assert_trees_bitequal(st, scan_state)
+
+
+def test_stationary_law_independent_of_rho():
+    """|h| stays Rayleigh for every ρ: the Sec. IV-A scheduling rate
+    exp(−h_min²) is preserved, only the round-to-round correlation
+    changes."""
+    n, h_min = 60_000, 0.6
+    for rho in (0.0, 0.9):
+        cm = ChannelModel(rho=rho)
+        h = cm.init_state(n, channel_lib.init_key(jax.random.key(0)))[0]
+        for t in range(4):
+            h = cm.advance(jax.random.key(100 + t), h)
+        hc = channel_lib.fading((h, None))
+        rate = float(jnp.mean((jnp.abs(hc) >= h_min).astype(jnp.float32)))
+        assert rate == pytest.approx(np.exp(-h_min ** 2), abs=0.01), rho
+
+
+def test_correlation_increases_with_rho():
+    """Higher ρ ⇒ stronger round-to-round fading correlation (the mobility
+    knob actually turns something)."""
+    n = 40_000
+    corrs = {}
+    for rho in (0.0, 0.95):
+        cm = ChannelModel(rho=rho)
+        h0 = cm.init_state(n, channel_lib.init_key(jax.random.key(1)))[0]
+        h1 = cm.advance(jax.random.key(2), h0)
+        a = np.asarray(channel_lib.fading((h0, None)).real)
+        b = np.asarray(channel_lib.fading((h1, None)).real)
+        corrs[rho] = np.corrcoef(a, b)[0, 1]
+    assert abs(corrs[0.0]) < 0.05
+    assert corrs[0.95] > 0.9
+
+
+def test_battery_debit_only_on_transmit():
+    """Scheduled ∧ charged clients pay tx_cost; masked/unsampled clients
+    keep their charge; drained clients are masked out."""
+    cm = ChannelModel(rho=0.0, battery=1.5, tx_cost=1.0)
+    state = cm.init_state(6, channel_lib.init_key(jax.random.key(0)))
+    idx = jnp.asarray([0, 2, 4])
+    # schedule=False: every sampled, charged client transmits
+    state, rc = cm.step(jax.random.key(1), state, idx, h_min=0.3,
+                        schedule=False)
+    batt = np.asarray(channel_lib.battery(state))
+    np.testing.assert_array_equal(batt[[0, 2, 4]], [0.5, 0.5, 0.5])
+    np.testing.assert_array_equal(batt[[1, 3, 5]], [1.5, 1.5, 1.5])
+    assert np.asarray(rc.mask).all()
+    # second transmission drains them below tx_cost → masked, not debited
+    state, rc = cm.step(jax.random.key(2), state, idx, h_min=0.3,
+                        schedule=False)
+    assert not np.asarray(rc.mask).any()
+    batt = np.asarray(channel_lib.battery(state))
+    np.testing.assert_array_equal(batt[[0, 2, 4]], [0.5, 0.5, 0.5])
+    assert float(rc.m_transmitting) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# engine integration: channel-off key layout unchanged
+
+
+def test_channel_off_key_layout_unchanged():
+    """``split_round_keys`` with channel off reproduces the historical
+    5-way (and faults-on 6-way) splits exactly — the property that keeps
+    ``channel_model=None`` trajectories (and the golden fixtures)
+    byte-identical to pre-scenario builds."""
+    from repro.sim import engine
+    key = jax.random.key(9)
+    legacy = tuple(jax.random.split(key, 5))
+    got = engine.split_round_keys(key)
+    assert got[5] is None and got[6] is None
+    for a, b in zip(legacy, got[:5]):
+        np.testing.assert_array_equal(jax.random.key_data(a),
+                                      jax.random.key_data(b))
+    legacy6 = tuple(jax.random.split(key, 6))
+    got_f = engine.split_round_keys(key, faults=True)
+    assert got_f[6] is None
+    for a, b in zip(legacy6, got_f[:6]):
+        np.testing.assert_array_equal(jax.random.key_data(a),
+                                      jax.random.key_data(b))
+    # channel stream rides LAST, after the fault stream
+    got_c = engine.split_round_keys(key, faults=True, channel=True)
+    assert got_c[5] is not None and got_c[6] is not None
+    got_co = engine.split_round_keys(key, channel=True)
+    assert got_co[5] is None and got_co[6] is not None
+
+
+# ---------------------------------------------------------------------------
+# engine ≡ tiered ≡ host-driven, channel on
+
+
+def _run_all_drivers(cm, rounds=6):
+    clients, store = _setup()
+    cfg = _chan_cfg(channel_model=cm)
+    p0 = softmax_init(None, 24, 4)
+    res = sim.run_experiment(softmax_loss, p0, store, cfg, rounds,
+                             donate=False)
+    host_store = sim.build_host_store(clients, n_buckets=2)
+    tier = sim.run_experiment(softmax_loss, p0, host_store, cfg, rounds,
+                              donate=False)
+    srv = FedServer(softmax_loss, p0, clients, cfg, store=store)
+    for t in range(rounds):
+        srv.run_round(t)
+    return res, tier, srv
+
+
+def test_engine_tiered_host_bitwise_with_channel():
+    """The §16 acceptance triangle: resident engine ≡ tiered stream ≡
+    host-driven FedServer rounds, bit for bit — params, metrics, AND the
+    final chain state (fading + batteries)."""
+    cm = ChannelModel(rho=0.85, battery=4.0, tx_cost=1.0)
+    res, tier, srv = _run_all_drivers(cm)
+    _assert_trees_bitequal(res.params, tier.params)
+    _assert_trees_bitequal(res.channel_state, tier.channel_state)
+    _assert_trees_bitequal(res.metrics, tier.metrics)
+    _assert_trees_bitequal(res.params, srv.params)
+    _assert_trees_bitequal(res.channel_state, srv._cstate)
+
+
+def test_battery_drain_shrinks_m_effective():
+    """With a finite energy budget the surviving cohort shrinks as
+    batteries drain — and every transmission is debited, so the drained
+    regime is permanent (no recharge in this model)."""
+    cm = ChannelModel(rho=0.0, battery=2.0, tx_cost=1.0)
+    clients, store = _setup()
+    cfg = _chan_cfg(channel_model=cm, n_participating=6)
+    p0 = softmax_init(None, 24, 4)
+    res = sim.run_experiment(softmax_loss, p0, store, cfg, 10, donate=False)
+    m_eff = np.asarray(res.metrics["m_effective"])
+    batt = np.asarray(channel_lib.battery(res.channel_state))
+    # every client started with 2 transmissions' worth of charge; after 10
+    # rounds of 6-of-8 sampling the fleet is largely drained
+    assert batt.sum() < 2.0 * store.n_clients
+    assert m_eff[-1] < m_eff[0] or batt.sum() == 0.0
+    # conservation: total debits == total effective transmissions
+    total_tx = 2.0 * store.n_clients - batt.sum()
+    assert total_tx == pytest.approx(m_eff.sum())
+
+
+def test_energy_ledger_and_manifest(tmp_path):
+    """The ledger prices each effective transmission at tx_cost and the
+    manifest carries the scenario block next to the fault block."""
+    cm = ChannelModel(rho=0.5, battery=5.0, tx_cost=2.0)
+    clients, store = _setup()
+    cfg = _chan_cfg(channel_model=cm)
+    p0 = softmax_init(None, 24, 4)
+    res = sim.run_experiment(softmax_loss, p0, store, cfg, 4, donate=False,
+                             checkpoint_dir=str(tmp_path),
+                             checkpoint_every=2)
+    rows = sim.history(res)
+    for row in rows:
+        assert row["energy_spent"] == row["m_effective"] * 2.0
+    assert res.ledger.tx_energy_client == 2.0
+    man = res.manifest
+    assert man["channel"]["rho"] == 0.5
+    assert man["channel"]["energy_gated"] is True
+    # ungated model: no energy columns (budget accounting off)
+    cfg2 = _chan_cfg(channel_model=ChannelModel(rho=0.5))
+    res2 = sim.run_experiment(softmax_loss, p0, store, cfg2, 2,
+                              donate=False)
+    assert "energy_spent" not in sim.history(res2)[0]
+
+
+def test_checkpoint_resume_with_channel_state(tmp_path):
+    """Kill-and-resume: the chain + batteries ride the durable checkpoint
+    carry, so a run killed mid-flight resumes to the bit-identical
+    trajectory — on the resident AND the tiered path."""
+    cm = ChannelModel(rho=0.8, battery=4.0, tx_cost=1.0)
+    clients, store = _setup()
+    cfg = _chan_cfg(channel_model=cm)
+    p0 = softmax_init(None, 24, 4)
+    ref = sim.run_experiment(softmax_loss, p0, store, cfg, 6, donate=False)
+
+    d = str(tmp_path / "resident")
+    part = sim.run_experiment(softmax_loss, p0, store, cfg, 6, donate=False,
+                              checkpoint_dir=d, checkpoint_every=2,
+                              max_segments=1)
+    assert part.rounds == 2
+    resumed = sim.run_experiment(softmax_loss, p0, store, cfg, 6,
+                                 donate=False, checkpoint_dir=d,
+                                 checkpoint_every=2, resume=True)
+    assert resumed.rounds == 6
+    _assert_trees_bitequal(ref.params, resumed.params)
+    _assert_trees_bitequal(ref.channel_state, resumed.channel_state)
+    _assert_trees_bitequal(ref.metrics, resumed.metrics)
+
+    # same drill on the tiered path: chain + batteries are host-resident
+    # there, and still land in (and resume from) the durable snapshot
+    host_store = sim.build_host_store(clients, n_buckets=2)
+    dt = str(tmp_path / "tiered")
+    sim.run_experiment(softmax_loss, p0, host_store, cfg, 6, donate=False,
+                       checkpoint_dir=dt, checkpoint_every=2,
+                       max_segments=1)
+    tiered = sim.run_experiment(softmax_loss, p0, host_store, cfg, 6,
+                                donate=False, checkpoint_dir=dt,
+                                checkpoint_every=2, resume=True)
+    _assert_trees_bitequal(ref.params, tiered.params)
+    _assert_trees_bitequal(ref.channel_state, tiered.channel_state)
+
+
+def test_chunked_equals_single_shot_with_channel(tmp_path):
+    """checkpoint_every=k segments ≡ one-shot scan with the chain in the
+    carry (the PR 7 invariant extended to the channel slot)."""
+    cm = ChannelModel(rho=0.7)
+    clients, store = _setup()
+    cfg = _chan_cfg(channel_model=cm)
+    p0 = softmax_init(None, 24, 4)
+    one = sim.run_experiment(softmax_loss, p0, store, cfg, 6, donate=False)
+    chunked = sim.run_experiment(softmax_loss, p0, store, cfg, 6,
+                                 donate=False, checkpoint_dir=str(tmp_path),
+                                 checkpoint_every=2)
+    _assert_trees_bitequal(one.params, chunked.params)
+    _assert_trees_bitequal(one.channel_state, chunked.channel_state)
+    _assert_trees_bitequal(one.metrics, chunked.metrics)
+
+
+def test_faults_compose_with_channel():
+    """Fault availability and channel gating stack: both processes ride
+    the carry, and the engine ≡ tiered invariant holds with both on."""
+    cm = ChannelModel(rho=0.6, battery=5.0, tx_cost=1.0)
+    faults = sim.FaultModel(p_fail=0.2, p_recover=0.5)
+    clients, store = _setup()
+    cfg = _chan_cfg(channel_model=cm)
+    p0 = softmax_init(None, 24, 4)
+    res = sim.run_experiment(softmax_loss, p0, store, cfg, 5, donate=False,
+                             faults=faults)
+    host_store = sim.build_host_store(clients, n_buckets=2)
+    tier = sim.run_experiment(softmax_loss, p0, host_store, cfg, 5,
+                              donate=False, faults=faults)
+    _assert_trees_bitequal(res.params, tier.params)
+    _assert_trees_bitequal(res.channel_state, tier.channel_state)
+    _assert_trees_bitequal(res.fault_state, tier.fault_state)
+
+
+# ---------------------------------------------------------------------------
+# the one-point channel-convention estimator (arXiv 2401.17460)
+
+
+def test_direction_conv_channel_runs_and_descends():
+    """direction_conv="channel" (directions = real baseband projections of
+    the fading, gaussian statistics, identity scale) trains on the wide
+    path and needs batch_directions."""
+    clients, store = _setup()
+    cfg = _chan_cfg(batch_directions=True, direction_conv="channel",
+                    channel_model=ChannelModel(rho=0.9))
+    p0 = softmax_init(None, 24, 4)
+    res = sim.run_experiment(softmax_loss, p0, store, cfg, 8, donate=False)
+    loss = np.asarray(res.metrics["mean_local_loss"])
+    assert np.isfinite(loss).all()
+    assert loss[-1] < loss[0]
+    with pytest.raises(ValueError, match="batch_directions"):
+        bad = _chan_cfg(direction_conv="channel")
+        sim.run_experiment(softmax_loss, p0, store, bad, 1, donate=False)

@@ -141,3 +141,60 @@ def test_noniid_shards_invariants(n_clients, seed):
     n = 2 * n_clients + int(seed) % 70
     x, y = _id_problem(n, 3, seed)
     _check_partition(noniid_shards(x, y, n_clients, seed=seed), n, n_clients)
+
+
+# ---------------------------------------------------------------------------
+# aircomp mask_stats: the one masking convention shared by every
+# aggregation path (channel truncation, faults, battery gating)
+
+
+def _stacked_deltas(seed: int, M: int):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(M, 5)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(M, 2)), jnp.float32)}
+
+
+@hypothesis.given(st.integers(1, 8), st.integers(0, 255), st.integers(0, 999))
+def test_all_ones_weights_are_bitwise_unweighted(M, mask_bits, seed):
+    """FedAvg size weighting with all-ones weights (uniform client sizes)
+    is bit-for-bit the unweighted path: identical per-row coefficients,
+    identical divisor whenever ≥1 client is scheduled, and an identical
+    Eq.-17 aggregate for the same noise key."""
+    from repro.core.aircomp import aircomp_aggregate, mask_stats
+
+    mask = jnp.asarray([(mask_bits >> i) & 1 for i in range(M)], jnp.bool_)
+    ones = jnp.ones((M,), jnp.float32)
+    mf_u, div_u, ms_u = mask_stats(mask, M)
+    mf_w, div_w, ms_w = mask_stats(mask, M, ones)
+    np.testing.assert_array_equal(np.asarray(mf_u), np.asarray(mf_w))
+    np.testing.assert_array_equal(np.asarray(ms_u), np.asarray(ms_w))
+    if int(ms_u) >= 1:
+        np.testing.assert_array_equal(np.asarray(div_u), np.asarray(div_w))
+    deltas = _stacked_deltas(seed, M)
+    key = jax.random.key(seed)
+    agg_u = aircomp_aggregate(deltas, key, snr_db=10.0, h_min=0.3, mask=mask)
+    agg_w = aircomp_aggregate(deltas, key, snr_db=10.0, h_min=0.3, mask=mask,
+                              weights=ones)
+    for a, b in zip(jax.tree.leaves(agg_u), jax.tree.leaves(agg_w)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@hypothesis.given(st.integers(1, 8), st.integers(0, 999))
+def test_all_masked_round_is_exact_zero_update(M, seed):
+    """A round where nothing transmits (deep fades everywhere, every
+    battery drained) degenerates to an EXACT zero aggregate — zero
+    numerator and zero Δ_max ⇒ zero Eq.-17 noise — on the unweighted AND
+    the size-weighted path, never a NaN from the 0/0."""
+    from repro.core.aircomp import aircomp_aggregate
+
+    mask = jnp.zeros((M,), jnp.bool_)
+    deltas = _stacked_deltas(seed, M)
+    w = jnp.asarray(np.random.default_rng(seed + 1).uniform(0.5, 2.0, M),
+                    jnp.float32)
+    key = jax.random.key(seed)
+    for weights in (None, w):
+        agg = aircomp_aggregate(deltas, key, snr_db=10.0, h_min=0.3,
+                                mask=mask, weights=weights)
+        for leaf in jax.tree.leaves(agg):
+            np.testing.assert_array_equal(np.asarray(leaf),
+                                          np.zeros_like(np.asarray(leaf)))

@@ -24,7 +24,7 @@ import pytest
 
 from repro import sim
 from repro.configs.base import FedZOConfig
-from repro.core import fedzo, seedcomm
+from repro.core import aircomp, fedavg, fedzo, seedcomm
 from repro.data.synthetic import (make_classification, noniid_shards,
                                   random_partition, sample_local_batches)
 from repro.fed.server import FedServer, run_seed_compressed_round
@@ -129,6 +129,31 @@ def test_engine_momentum_changes_trajectory():
         return np.asarray(res.params["w"])
 
     assert np.abs(final(0.0) - final(0.9)).max() > 1e-8
+
+
+def test_weighted_unscheduled_round_reports_m_effective():
+    """``weight_by_size`` without channel scheduling runs the masked-mean
+    branch with mask=None — it must STILL report ``m_effective`` (= M,
+    nothing masked) so history/CSV columns stay consistent across the
+    scenarios of one sweep. Regression: pre-fix the column silently
+    vanished on exactly this path (fedzo pytree + flat, and fedavg)."""
+    clients, store = _setup()
+    p0 = softmax_init(None, 24, 4)
+    cfg = _cfg()
+    batches = sim.sample_batches(store, jnp.arange(4), jax.random.key(7),
+                                 cfg.local_iters, cfg.b1)
+    rngs = jax.random.split(jax.random.key(1), 4)
+    w = aircomp.size_weights(store.sizes[:4])
+    _, m_tree = fedzo.round_simulated(softmax_loss, p0, batches, rngs, cfg,
+                                      weights=w)
+    assert float(m_tree["m_effective"]) == 4.0
+    cfgf = _cfg(flat_params=True, flat_block_rows=BR)
+    _, m_flat = fedzo.round_simulated(softmax_loss, p0, batches, rngs, cfgf,
+                                      weights=w)
+    assert float(m_flat["m_effective"]) == 4.0
+    _, m_avg = fedavg.round_simulated(softmax_loss, p0, batches, cfg,
+                                      weights=w)
+    assert float(m_avg["m_effective"]) == 4.0
 
 
 # ---------------------------------------------------------------------------
@@ -409,6 +434,24 @@ def test_sweep_groups_static_shapes_and_vmaps_dynamics(tmp_path):
     # every scenario × round × metric row present
     n_metrics = len(recs[0]["metrics"])
     assert len(text) == 1 + 8 * 3 * n_metrics
+
+
+def test_sweep_split_normalizes_list_valued_statics():
+    """A list-valued static override (e.g. a shape) must still produce a
+    hashable static signature — the signature is the compile-group dict
+    key. Regression: pre-fix this raised an opaque ``TypeError:
+    unhashable type: 'list'`` from the group dict."""
+    from repro.sim.sweep import _split
+    static, dyn = _split({"local_iters": 2, "snr_db": 0.0,
+                          "image_shape": [8, 8, 1]})
+    assert dyn == {"snr_db": 0.0}
+    groups = {}
+    groups.setdefault(static, []).append("scenario")  # pre-fix: TypeError
+    assert ("image_shape", (8, 8, 1)) in static
+    assert ("local_iters", 2) in static
+    # non-sequence unhashables get a targeted error naming the field
+    with pytest.raises(TypeError, match="image_shape"):
+        _split({"image_shape": {"h": 8}})
 
 
 def test_sweep_scenarios_differ_by_snr():

@@ -124,8 +124,9 @@ def test_stream_replays_engine_key_chain(faults):
     stream = CohortStream(
         host, cfg, sim.experiment_key(cfg), faults=faults,
         fstate=faults.init_state(len(clients)) if faults else None)
-    idx, avail = stream.plan(5)
+    idx, avail, chan_h, chan_mask = stream.plan(5)
     assert idx.shape == (5, cfg.n_participating)
+    assert chan_h is None and chan_mask is None
     np.testing.assert_array_equal(jax.random.key_data(stream.key),
                                   jax.random.key_data(res.key))
     if faults is not None:
@@ -141,6 +142,42 @@ def test_stream_replays_engine_key_chain(faults):
         want = sim.sample_participants(ks[1], len(clients),
                                        cfg.n_participating)
         np.testing.assert_array_equal(idx[t], np.asarray(want))
+
+
+@pytest.mark.parametrize("faults", [None, sim.FaultModel(p_fail=0.3,
+                                                         p_recover=0.5)])
+def test_stream_replays_channel_chain(faults):
+    """With a ``ChannelModel`` attached the stream's host-replayed fading
+    chain, battery ledger, and per-round cohort channel stay BITWISE in
+    lockstep with the engine carry — the channel key stream widens the
+    round split without perturbing the participation/batch draws."""
+    from repro.sim import channel as channel_lib
+
+    clients = _ragged_clients()
+    store = sim.build_store(clients)
+    cm = sim.ChannelModel(rho=0.8, battery=3.0, tx_cost=1.0)
+    cfg = _cfg(channel_model=cm, channel_schedule=True, h_min=0.3)
+    p0 = softmax_init(None, 24, 4)
+    res = sim.run_experiment(softmax_loss, p0, store, cfg, 5, faults=faults,
+                             donate=False)
+
+    host = sim.build_host_store(clients, n_buckets=3)
+    key = sim.experiment_key(cfg)
+    stream = CohortStream(
+        host, cfg, key, faults=faults,
+        fstate=faults.init_state(len(clients)) if faults else None,
+        cstate=cm.init_state(len(clients), channel_lib.init_key(key)))
+    idx, avail, chan_h, chan_mask = stream.plan(5)
+    assert chan_h.shape == (5, cfg.n_participating)
+    assert chan_mask.shape == (5, cfg.n_participating)
+    np.testing.assert_array_equal(jax.random.key_data(stream.key),
+                                  jax.random.key_data(res.key))
+    for a, b in zip(jax.tree.leaves(stream.cstate),
+                    jax.tree.leaves(res.channel_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    if faults is not None:
+        np.testing.assert_array_equal(np.asarray(stream.fstate),
+                                      np.asarray(res.fault_state))
 
 
 # ---------------------------------------------------------------------------
